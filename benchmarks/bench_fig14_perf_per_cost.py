@@ -1,0 +1,50 @@
+"""Fig. 14/15 + §6.5 — performance and performance-per-cost, ECI vs Centaur.
+
+The paper's headline numbers (infeasible/limited-capacity regime):
+performance +17%, performance-per-cost +30%.  Reports both headline ratios
+plus the per-tenant breakdown and cumulative-latency curve (Fig. 15).
+"""
+from __future__ import annotations
+
+from benchmarks.common import MSR_NAMES, emit, run_scheme
+
+
+def main() -> dict:
+    cap = 6000            # the paper's regime: ECI feasible, Centaur not
+    eci, secs_e = run_scheme("eci", cap, windows=6)
+    cen, secs_c = run_scheme("centaur", cap, windows=6)
+    es, cs = eci.summary(), cen.summary()
+
+    perf_gain = es["performance"] / cs["performance"] - 1.0
+    ppc_gain = es["perf_per_cost"] / cs["perf_per_cost"] - 1.0
+    emit("fig14_performance_gain", secs_e / 6 * 1e6, f"{perf_gain:+.1%}")
+    emit("fig14_perf_per_cost_gain", secs_c / 6 * 1e6, f"{ppc_gain:+.1%}")
+
+    for t_e, t_c in zip(eci.tenants, cen.tenants):
+        pe = t_e.result.perf
+        pc = t_c.result.perf
+        emit(f"fig14_{t_e.name}", 0.0,
+             f"perf_ratio={pe / pc if pc else float('nan'):.2f}"
+             f"_alloc={t_e.cache.capacity}v{t_c.cache.capacity}")
+
+    # Fig. 15: cumulative latency over windows
+    cum_e = cum_c = 0.0
+    curve = []
+    for w, (de, dc) in enumerate(zip(eci.history, cen.history)):
+        cum_e = sum(t.result.total_latency for t in eci.tenants)
+        cum_c = sum(t.result.total_latency for t in cen.tenants)
+        curve.append((w, cum_e, cum_c))
+    emit("fig15_final_cumulative_latency", 0.0,
+         f"eci={cum_e:.0f}_centaur={cum_c:.0f}_"
+         f"reduction={1 - cum_e / cum_c:+.1%}")
+    checks = {
+        "perf_improves": perf_gain > 0.0,
+        "ppc_improves": ppc_gain > 0.10,
+        "latency_reduced": cum_e < cum_c,
+    }
+    emit("fig14_checks", 0.0, ";".join(f"{k}={v}" for k, v in checks.items()))
+    return {"perf_gain": perf_gain, "ppc_gain": ppc_gain, "checks": checks}
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Shared benchmark harness: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (one per measured
+configuration) so ``benchmarks.run`` aggregates a single CSV, and returns a
+dict of headline metrics validated against the paper's claims in
+EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+from repro.core import make_manager
+from repro.data.traces import MSR_PROFILES, msr_trace
+
+__all__ = ["emit", "timed", "run_scheme", "MSR_NAMES", "DEFAULT_SIM"]
+
+MSR_NAMES = list(MSR_PROFILES)
+
+# latency model shared by every trace-driven benchmark (DESIGN.md §2):
+# t_fast = HBM page hit, t_slow = host-tier fetch, flush = dirty writeback
+# contention (the Fig. 3 effect), bypassed writes absorbed by the slow
+# tier's write buffer.
+DEFAULT_SIM = dict(t_fast=1.0, t_slow=20.0, flush_cost=10.0)
+
+
+def emit(name: str, us_per_call: float, derived: str | float) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+@contextmanager
+def timed(holder: dict, key: str = "s"):
+    t0 = time.perf_counter()
+    yield
+    holder[key] = time.perf_counter() - t0
+
+
+def run_scheme(scheme: str, capacity: int, *, windows: int = 5,
+               n_per_window: int = 4000, seed: int = 0, names=None,
+               c_min: int = 50, initial_blocks: int = 100, **kw):
+    """Standard 16-tenant experiment; returns (manager, wall_seconds)."""
+    names = names or MSR_NAMES
+    sim = dict(DEFAULT_SIM)
+    sim.update(kw)
+    mgr = make_manager(scheme, capacity, names, c_min=c_min,
+                       initial_blocks=initial_blocks, **sim)
+    t0 = time.perf_counter()
+    for w in range(windows):
+        traces = [msr_trace(nm, n_per_window, seed=seed + 1000 * w + i)
+                  for i, nm in enumerate(names)]
+        mgr.run_window(traces)
+    return mgr, time.perf_counter() - t0

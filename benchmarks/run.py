@@ -1,0 +1,58 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows and a final PASS/FAIL summary
+of the per-benchmark reproduction checks.  See EXPERIMENTS.md for the
+interpretation against the paper's published numbers.
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_appendixA_feasible, bench_fig04_write_policy,
+                        bench_fig10_allocation,
+                        bench_fig12_policy_assignment,
+                        bench_fig14_perf_per_cost, bench_fig16_endurance,
+                        bench_serving_cache, bench_table3_urd_overhead)
+
+BENCHES = [
+    ("fig04_write_policy", bench_fig04_write_policy),
+    ("fig10_allocation", bench_fig10_allocation),
+    ("fig12_policy_assignment", bench_fig12_policy_assignment),
+    ("fig14_perf_per_cost", bench_fig14_perf_per_cost),
+    ("fig16_endurance", bench_fig16_endurance),
+    ("table3_urd_overhead", bench_table3_urd_overhead),
+    ("appendixA_feasible", bench_appendixA_feasible),
+    ("serving_cache", bench_serving_cache),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    all_checks: dict[str, bool] = {}
+    for name, mod in BENCHES:
+        t0 = time.time()
+        try:
+            out = mod.main()
+            checks = (out or {}).get("checks", {})
+            for k, v in checks.items():
+                all_checks[f"{name}:{k}"] = bool(v)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+        print(f"bench_{name}_wall,{(time.time() - t0) * 1e6:.0f},done")
+    print()
+    n_pass = sum(all_checks.values())
+    for k, v in sorted(all_checks.items()):
+        if not v:
+            print(f"CHECK-FAIL {k}")
+    print(f"reproduction checks: {n_pass}/{len(all_checks)} passed; "
+          f"{len(failures)} benchmark errors {failures or ''}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

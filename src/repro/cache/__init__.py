@@ -1,0 +1,5 @@
+"""Paged block pool + two-tier (HBM/host) KV cache under ECI management."""
+from repro.cache.block_pool import BlockPool, PageMeta
+from repro.cache.tiered import TieredKVCache, TierStats
+
+__all__ = ["BlockPool", "PageMeta", "TieredKVCache", "TierStats"]

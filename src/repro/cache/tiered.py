@@ -1,0 +1,167 @@
+"""Two-tier paged KV cache (HBM pool + host tier) managed by ECI-Cache.
+
+Mapping (DESIGN.md §2): HBM pool == SSD cache, host tier == HDD subsystem.
+A *read* is a prefix-page reuse (decode/prefill hitting a cached page); a
+*write* is the admission of a freshly computed page.  Per-tenant write
+policy:
+
+  WB — every fresh page is admitted to HBM immediately (classic prefix
+       caching: best reuse latency, maximal pool write traffic);
+  RO — fresh pages go to the host tier only; a page is *promoted* to HBM
+       the first time it is re-read (write-around: pages that are never
+       re-read never cost HBM writes or capacity).
+
+Every event is forwarded to the ``ECICacheManager`` Monitor; at window
+boundaries ``rebalance()`` applies the Analyzer's sizes (page quotas) and
+policies through the pool's quota enforcement — the Actuator.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.cache.block_pool import BlockPool
+from repro.core.manager import ECICacheManager
+from repro.core.write_policy import WritePolicy
+
+__all__ = ["TieredKVCache", "TierStats"]
+
+
+@dataclasses.dataclass
+class TierStats:
+    hbm_hits: int = 0
+    host_hits: int = 0
+    misses: int = 0                 # page had to be (re)computed
+    hbm_writes: int = 0             # endurance metric (paper Eq. 3)
+    promotions: int = 0
+    bypassed_writes: int = 0
+
+    @property
+    def accesses(self) -> int:
+        return self.hbm_hits + self.host_hits + self.misses
+
+    @property
+    def hit_ratio(self) -> float:
+        return self.hbm_hits / self.accesses if self.accesses else 0.0
+
+
+class TieredKVCache:
+    """Prefix-page cache across tenants with ECI-managed partitioning."""
+
+    def __init__(self, pool: BlockPool, manager: ECICacheManager,
+                 window_events: int = 4096):
+        self.pool = pool
+        self.manager = manager
+        self.host: dict[tuple, int] = {}       # key -> host "address"
+        self._next_host = 0
+        self.quotas = {i: None for i in range(len(manager.tenants))}
+        self.policies = {i: t.policy for i, t in enumerate(manager.tenants)}
+        self.stats = [TierStats() for _ in manager.tenants]
+        self._events = 0
+        self.window_events = window_events
+        self._pending: list[tuple[int, int, bool]] = []  # (tenant, addr, read)
+
+    # ----------------------------------------------------------- app API
+    def _addr(self, key: tuple) -> int:
+        """Stable integer address per content key (for the Monitor)."""
+        a = self.host.get(key)
+        if a is None:
+            a = self._next_host
+            self._next_host += 1
+            self.host[key] = a
+        return a
+
+    def access_page(self, tenant: int, key: tuple,
+                    fresh: bool = False) -> str:
+        """One page touch.  fresh=True → this is a newly computed page
+        (a *write*); fresh=False → the engine wants to reuse it (a *read*).
+
+        Returns where it was served from: "hbm" | "host" | "miss".
+        """
+        st = self.stats[tenant]
+        addr = self._addr(key)
+        self._pending.append((tenant, addr, not fresh))
+        self._events += 1
+        served = "miss"
+
+        if fresh:
+            if self.policies[tenant] is WritePolicy.WB:
+                pid, _ = self.pool.allocate(tenant, key,
+                                            quota=self.quotas[tenant],
+                                            dirty=True)
+                if pid is not None:
+                    st.hbm_writes += 1
+                    served = "hbm"
+            else:                               # RO: write-around
+                st.bypassed_writes += 1
+                served = "host"
+        else:
+            pid = self.pool.lookup(key)
+            if pid is not None:
+                st.hbm_hits += 1
+                served = "hbm"
+            elif key in self.host and self._host_materialized(key):
+                st.host_hits += 1
+                served = "host"
+                # promote on proven reuse (RO admission rule)
+                pid, _ = self.pool.allocate(tenant, key,
+                                            quota=self.quotas[tenant],
+                                            dirty=False)
+                if pid is not None:
+                    st.hbm_writes += 1
+                    st.promotions += 1
+            else:
+                st.misses += 1
+        if self._events >= self.window_events:
+            self.rebalance()
+        return served
+
+    def _host_materialized(self, key: tuple) -> bool:
+        # host tier retains every page ever computed (capacity >> HBM)
+        return True
+
+    def finish_tenant(self, tenant: int) -> None:
+        self.pool.release_tenant(tenant)
+        self.manager.retire_tenant(tenant)
+
+    # ------------------------------------------------- Analyzer/Actuator
+    def rebalance(self) -> None:
+        """Flush the event window into the Monitor, re-run Alg. 1 + Alg. 3,
+        apply quotas/policies (Actuator)."""
+        if not self._pending:
+            return
+        ev = np.array(self._pending, dtype=np.int64)
+        self._pending.clear()
+        self._events = 0
+        for t in range(len(self.manager.tenants)):
+            rows = ev[ev[:, 0] == t]
+            if rows.size:
+                self.manager.record(t, rows[:, 1], rows[:, 2].astype(bool))
+        decision = self.manager.analyze()
+        for i, tstate in enumerate(self.manager.tenants):
+            if not tstate.active:
+                continue
+            self.quotas[i] = int(decision.sizes[i])
+            self.policies[i] = tstate.policy
+            self.pool.enforce_quota(i, self.quotas[i])
+            tstate.clear_window()
+
+    # ------------------------------------------------------------ report
+    def summary(self) -> dict:
+        tot = TierStats()
+        for s in self.stats:
+            tot.hbm_hits += s.hbm_hits; tot.host_hits += s.host_hits
+            tot.misses += s.misses; tot.hbm_writes += s.hbm_writes
+            tot.promotions += s.promotions
+            tot.bypassed_writes += s.bypassed_writes
+        return {
+            "hbm_hit_ratio": tot.hit_ratio,
+            "hbm_writes": tot.hbm_writes,
+            "bypassed_writes": tot.bypassed_writes,
+            "promotions": tot.promotions,
+            "resident_pages": sum(self.pool.resident(i)
+                                  for i in range(len(self.stats))),
+            "quotas": dict(self.quotas),
+            "policies": {i: p.value for i, p in self.policies.items()},
+        }

@@ -1,0 +1,1 @@
+"""Sharding-aware checkpointing with elastic (cross-mesh) restore."""

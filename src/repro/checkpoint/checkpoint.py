@@ -1,0 +1,115 @@
+"""Sharding-aware checkpointing with async save and elastic restore.
+
+Format: one ``.npz`` of flattened tree leaves + a JSON manifest (tree paths,
+shapes, dtypes, step).  Leaves are pulled to host as full (logical) arrays —
+with jax.Array + NamedSharding this is a device-to-host gather; restore
+``device_put``s each leaf with the *target* mesh's sharding, so a checkpoint
+written on one mesh restores onto any other (elastic scaling), including
+meshes with different axis sizes — the manifest stores logical shapes only.
+
+Fault-tolerance contract (used by ``repro.train.trainer``): saves are
+atomic (tmp + rename), the latest complete step wins, an async writer thread
+overlaps serialization with the next training step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind not in "biufc":   # ml_dtypes (bf16 …): store f32
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path: str, tree, step: int) -> str:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    tmp = os.path.join(path, f".tmp_step_{step}.npz")
+    final = os.path.join(path, f"step_{step}.npz")
+    np.savez(tmp, **flat)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in flat.items()},
+    }
+    with open(os.path.join(path, f".tmp_step_{step}.json"), "w") as f:
+        json.dump(manifest, f)
+    os.rename(tmp, final)
+    os.rename(os.path.join(path, f".tmp_step_{step}.json"),
+              os.path.join(path, f"step_{step}.json"))
+    return final
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[5:-5]) for f in os.listdir(path)
+             if f.startswith("step_") and f.endswith(".json")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str, like_tree, step: int | None = None,
+                       shardings=None):
+    """Restore into the structure of ``like_tree``.
+
+    ``shardings``: optional matching tree of NamedShardings for the target
+    mesh (elastic restore re-shards here).
+    """
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    data = np.load(os.path.join(path, f"step_{step}.npz"))
+    flat_like = jax.tree_util.tree_flatten_with_path(like_tree)
+    leaves = []
+    shard_leaves = (jax.tree.leaves(shardings)
+                    if shardings is not None else None)
+    for i, (pth, leaf) in enumerate(flat_like[0]):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in pth)
+        arr = data[key]
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(
+                arr.astype(leaf.dtype) if arr.dtype != leaf.dtype else arr,
+                shard_leaves[i]))
+        else:
+            leaves.append(jax.numpy.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(flat_like[1], leaves), step
+
+
+class AsyncCheckpointer:
+    """Background writer: overlap checkpoint serialization with training."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._thread: threading.Thread | None = None
+
+    def save(self, tree, step: int) -> None:
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)   # sync pull to host
+        self._thread = threading.Thread(
+            target=save_checkpoint, args=(self.path, host_tree, step),
+            daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

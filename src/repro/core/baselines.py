@@ -1,0 +1,120 @@
+"""Baseline cache-management schemes the paper compares against (§2).
+
+  * ``centaur``        — state-of-the-art dynamic partitioning [Koller+,
+    ICAC'15]: TRD-based MRC sizing, Eq.-2-style optimization when infeasible,
+    WB policy everywhere.  (The paper's head-to-head baseline.)
+  * ``static``         — equal static partitioning, WB (EMC VFCache-style).
+  * ``global_share``   — one global LRU shared by all tenants, WB
+    (Fusion-io ioTurbine-style).
+  * ``reuse_intensity``— vCacheShare-like: partitions proportionally to each
+    tenant's re-reference *intensity* (hit burstiness proxy), Write-Around
+    (= RO) everywhere, matching vCacheShare's fixed policy.
+  * ``eci``            — the paper's scheme (URD sizing + Alg. 3 policies).
+
+All are thin configurations of ``ECICacheManager`` so every scheme shares
+the identical simulator, latency model and accounting.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.manager import ECICacheManager
+from repro.core.mrc import HitRatioFunction
+from repro.core.partitioner import PartitionResult, greedy_allocate
+from repro.core.simulator import LRUCache, SimResult, simulate
+from repro.core.trace import Trace
+from repro.core.write_policy import WritePolicy
+
+__all__ = ["make_manager", "GlobalLRUManager", "SCHEMES"]
+
+
+def _static_partition(hs: list[HitRatioFunction], capacity: int,
+                      t_fast: float, t_slow: float,
+                      c_min: int = 0, weights=None) -> PartitionResult:
+    n = max(len(hs), 1)
+    share = capacity // n
+    sizes = np.full(len(hs), share, dtype=np.int64)
+    from repro.core.partitioner import aggregate_latency
+    return PartitionResult(
+        sizes, False, aggregate_latency(hs, sizes, t_fast, t_slow, weights),
+        np.array([h(int(s)) for h, s in zip(hs, sizes)]))
+
+
+def _reuse_intensity_partition(hs: list[HitRatioFunction], capacity: int,
+                               t_fast: float, t_slow: float,
+                               c_min: int = 0, weights=None) -> PartitionResult:
+    """Proportional to max achievable hit mass (reuse intensity proxy)."""
+    intensity = np.array([h.max_hit_ratio * h.n_accesses for h in hs], float)
+    total = intensity.sum()
+    if total <= 0:
+        return _static_partition(hs, capacity, t_fast, t_slow, c_min, weights)
+    sizes = np.floor(intensity / total * capacity).astype(np.int64)
+    sizes = np.maximum(sizes, min(c_min, capacity // max(len(hs), 1)))
+    from repro.core.partitioner import aggregate_latency
+    return PartitionResult(
+        sizes, False, aggregate_latency(hs, sizes, t_fast, t_slow, weights),
+        np.array([h(int(s)) for h, s in zip(hs, sizes)]))
+
+
+def make_manager(scheme: str, capacity: int, tenant_names: list[str],
+                 **kw) -> ECICacheManager:
+    """Factory for every comparison scheme (same knobs as ECICacheManager)."""
+    if scheme == "eci":
+        return ECICacheManager(capacity, tenant_names, rd_kind="urd",
+                               adaptive_policy=True, **kw)
+    if scheme == "centaur":
+        return ECICacheManager(capacity, tenant_names, rd_kind="trd",
+                               adaptive_policy=False, **kw)
+    if scheme == "static":
+        m = ECICacheManager(capacity, tenant_names, rd_kind="trd",
+                            adaptive_policy=False,
+                            partition_fn=_static_partition, **kw)
+        return m
+    if scheme == "reuse_intensity":
+        m = ECICacheManager(capacity, tenant_names, rd_kind="trd",
+                            adaptive_policy=False,
+                            partition_fn=_reuse_intensity_partition, **kw)
+        for t in m.tenants:           # vCacheShare uses Write-Around always
+            t.policy = WritePolicy.RO
+        return m
+    raise ValueError(f"unknown scheme {scheme!r} (see SCHEMES)")
+
+
+class GlobalLRUManager:
+    """One shared LRU over all tenants (no partitioning, WB)."""
+
+    def __init__(self, capacity: int, tenant_names: list[str],
+                 t_fast: float = 1.0, t_slow: float = 20.0, **_):
+        self.cache = LRUCache(capacity)
+        self.capacity = capacity
+        self.t_fast, self.t_slow = t_fast, t_slow
+        self.results = [SimResult(capacity=capacity) for _ in tenant_names]
+
+    def run_window(self, traces: list[Trace | None]) -> None:
+        for i, tr in enumerate(traces):
+            if tr is None:
+                continue
+            res = simulate(tr, self.cache.capacity, WritePolicy.WB,
+                           self.t_fast, self.t_slow, cache=self.cache)
+            agg = self.results[i]
+            agg.reads += res.reads; agg.read_hits += res.read_hits
+            agg.writes += res.writes; agg.cache_writes += res.cache_writes
+            agg.total_latency += res.total_latency
+
+    def summary(self) -> dict[str, float]:
+        n = sum(r.n for r in self.results)
+        lat = sum(r.total_latency for r in self.results)
+        writes = sum(r.cache_writes for r in self.results)
+        mean_lat = lat / n if n else 0.0
+        return {
+            "accesses": n, "mean_latency": mean_lat,
+            "performance": 1.0 / mean_lat if mean_lat else 0.0,
+            "cache_writes": writes, "allocated_blocks": self.capacity,
+            "perf_per_cost": ((1.0 / mean_lat) / self.capacity
+                              if mean_lat and self.capacity else 0.0),
+            "read_hit_ratio": (sum(r.read_hits for r in self.results)
+                               / max(sum(r.reads for r in self.results), 1)),
+        }
+
+
+SCHEMES = ("eci", "centaur", "static", "reuse_intensity", "global")

@@ -1,0 +1,210 @@
+"""Monitor → Analyzer → Actuator loop (paper Fig. 8, Alg. 1/3/4).
+
+``ECICacheManager`` is the hypervisor-level controller:
+
+  * ``Monitor``  — accumulates per-tenant (addr, r/w) events for the current
+    Δt window (the paper's modified-blktrace).
+  * ``Analyzer`` — at window boundaries computes URD (or TRD for baselines),
+    builds H_i(c), estimates URD-based sizes, checks feasibility, and — when
+    infeasible — runs the Eq.-2 partitioner; also assigns write policies
+    (Alg. 3).
+  * ``Actuator`` — applies the decisions: resizes per-tenant LRU partitions
+    (evicting LRU-first on shrink) and switches write policies; keeps the
+    Map Table (block residency) implicitly through the per-tenant caches.
+
+The same class drives both the trace-replay benchmarks and the live paged-KV
+serving engine (see ``repro.cache.tiered`` which feeds events back here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.mrc import HitRatioFunction, build_hit_ratio_function
+from repro.core.partitioner import (PartitionResult, greedy_allocate,
+                                    pgd_solve)
+from repro.core.reuse_distance import (RDResult, reuse_distances,
+                                       sampled_reuse_distances,
+                                       urd_cache_blocks)
+from repro.core.simulator import LRUCache, SimResult, simulate
+from repro.core.trace import Trace
+from repro.core.write_policy import WritePolicy, assign_write_policy
+
+__all__ = ["TenantState", "AnalyzerDecision", "ECICacheManager"]
+
+
+@dataclasses.dataclass
+class TenantState:
+    name: str
+    cache: LRUCache
+    policy: WritePolicy = WritePolicy.WB        # paper: WB initially
+    h_fn: HitRatioFunction | None = None
+    urd_size: int = 0
+    window_addrs: list[np.ndarray] = dataclasses.field(default_factory=list)
+    window_reads: list[np.ndarray] = dataclasses.field(default_factory=list)
+    result: SimResult = dataclasses.field(default_factory=SimResult)
+    active: bool = True                         # finished tenants are excluded
+
+    def window_trace(self) -> Trace:
+        if not self.window_addrs:
+            return Trace(np.zeros(0, np.int64), np.zeros(0, bool), self.name)
+        return Trace(np.concatenate(self.window_addrs),
+                     np.concatenate(self.window_reads), self.name)
+
+    def clear_window(self) -> None:
+        self.window_addrs.clear()
+        self.window_reads.clear()
+
+
+@dataclasses.dataclass(frozen=True)
+class AnalyzerDecision:
+    sizes: np.ndarray
+    policies: list[WritePolicy]
+    feasible: bool
+    partition: PartitionResult
+
+
+class ECICacheManager:
+    """Dynamic per-tenant cache sizing (URD) + write-policy assignment.
+
+    Parameters mirror the paper's setup: ``capacity`` in blocks, ``c_min``
+    initial/minimum per-tenant blocks (paper: 1000), ``w_threshold`` for
+    Alg. 3 (paper sweeps 0.2–0.9, default 0.5), ``t_fast``/``t_slow`` the
+    SSD/HDD (here HBM/host-tier) service times.
+
+    ``rd_kind='trd'`` + ``adaptive_policy=False`` turns this manager into the
+    **Centaur** baseline (TRD sizing, WB everywhere) — see ``baselines.py``.
+    """
+
+    def __init__(self, capacity: int, tenant_names: list[str],
+                 c_min: int = 1000, w_threshold: float = 0.5,
+                 t_fast: float = 1.0, t_slow: float = 20.0,
+                 t_write_bypass: float | None = None, flush_cost: float = 0.0,
+                 rd_kind: str = "urd", adaptive_policy: bool = True,
+                 sample_rate: float | None = None,
+                 initial_blocks: int | None = None,
+                 percentile: float = 100.0,
+                 partition_fn: Callable = pgd_solve):
+        self.capacity = int(capacity)
+        self.c_min = int(c_min)
+        self.w_threshold = float(w_threshold)
+        self.t_fast, self.t_slow = float(t_fast), float(t_slow)
+        self.t_write_bypass = (1.2 * t_fast if t_write_bypass is None
+                               else float(t_write_bypass))
+        self.flush_cost = float(flush_cost)
+        self.rd_kind = rd_kind
+        self.adaptive_policy = adaptive_policy
+        self.sample_rate = sample_rate
+        self.percentile = percentile
+        self.partition_fn = partition_fn
+        init = int(initial_blocks if initial_blocks is not None else c_min)
+        self.tenants = [TenantState(n, LRUCache(init)) for n in tenant_names]
+        self.history: list[AnalyzerDecision] = []
+
+    # ------------------------------------------------------------- Monitor
+    def record(self, tenant: int, addrs: np.ndarray, is_read: np.ndarray) -> None:
+        t = self.tenants[tenant]
+        t.window_addrs.append(np.asarray(addrs, np.int64))
+        t.window_reads.append(np.asarray(is_read, bool))
+
+    def retire_tenant(self, tenant: int) -> None:
+        """Workload finished: release its partition (paper §6.3)."""
+        t = self.tenants[tenant]
+        t.active = False
+        t.cache.resize(0)
+
+    # ------------------------------------------------------------ Analyzer
+    def _rd(self, trace: Trace) -> RDResult:
+        if self.sample_rate is not None and len(trace) > 0:
+            return sampled_reuse_distances(trace, self.rd_kind, self.sample_rate)
+        return reuse_distances(trace, self.rd_kind)
+
+    def analyze(self) -> AnalyzerDecision:
+        """Alg. 1 / Alg. 4: run at every Δt window boundary."""
+        active = [t for t in self.tenants if t.active]
+        hs: list[HitRatioFunction] = []
+        for t in active:
+            tr = t.window_trace()
+            rd = self._rd(tr)
+            t.h_fn = build_hit_ratio_function(rd)
+            t.urd_size = urd_cache_blocks(rd, self.percentile)
+            hs.append(t.h_fn)
+
+        part = self.partition_fn(hs, self.capacity, self.t_fast, self.t_slow,
+                                 c_min=self.c_min)
+        policies = []
+        for t in active:
+            if self.adaptive_policy:
+                t.policy = assign_write_policy(t.window_trace(), self.w_threshold)
+            policies.append(t.policy)
+
+        sizes_full = np.zeros(len(self.tenants), dtype=np.int64)
+        k = 0
+        for i, t in enumerate(self.tenants):
+            if t.active:
+                sizes_full[i] = part.sizes[k]
+                k += 1
+        decision = AnalyzerDecision(sizes_full,
+                                    [t.policy for t in self.tenants],
+                                    part.feasible, part)
+        self.history.append(decision)
+        return decision
+
+    # ------------------------------------------------------------ Actuator
+    def actuate(self, decision: AnalyzerDecision) -> None:
+        for t, size in zip(self.tenants, decision.sizes):
+            if t.active:
+                t.cache.resize(int(size))
+                t.clear_window()
+
+    # --------------------------------------------------------- trace replay
+    def run_window(self, traces: list[Trace | None]) -> None:
+        """Replay one Δt window for every tenant, then analyze + actuate.
+
+        ``traces[i] is None`` marks tenant i as finished.
+        """
+        for i, tr in enumerate(traces):
+            t = self.tenants[i]
+            if tr is None:
+                if t.active:
+                    self.retire_tenant(i)
+                continue
+            self.record(i, tr.addrs, tr.is_read)
+            res = simulate(tr, t.cache.capacity, t.policy,
+                           self.t_fast, self.t_slow,
+                           t_write_bypass=self.t_write_bypass,
+                           flush_cost=self.flush_cost, cache=t.cache)
+            # accumulate into the tenant's running totals
+            agg = t.result
+            agg.reads += res.reads; agg.read_hits += res.read_hits
+            agg.writes += res.writes; agg.write_hits += res.write_hits
+            agg.cache_writes += res.cache_writes
+            agg.total_latency += res.total_latency
+            agg.capacity = t.cache.capacity
+            agg.policy = t.policy.value
+        decision = self.analyze()
+        self.actuate(decision)
+
+    # ------------------------------------------------------------- metrics
+    def allocated_sizes(self) -> np.ndarray:
+        return np.array([t.cache.capacity for t in self.tenants], np.int64)
+
+    def summary(self) -> dict[str, float]:
+        res = [t.result for t in self.tenants]
+        n = sum(r.n for r in res)
+        lat = sum(r.total_latency for r in res)
+        writes = sum(r.cache_writes for r in res)
+        alloc = int(self.allocated_sizes().sum())
+        mean_lat = lat / n if n else 0.0
+        return {
+            "accesses": n,
+            "mean_latency": mean_lat,
+            "performance": 1.0 / mean_lat if mean_lat else 0.0,
+            "cache_writes": writes,
+            "allocated_blocks": alloc,
+            "perf_per_cost": (1.0 / mean_lat) / alloc if mean_lat and alloc else 0.0,
+            "read_hit_ratio": (sum(r.read_hits for r in res)
+                               / max(sum(r.reads for r in res), 1)),
+        }

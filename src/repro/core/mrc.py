@@ -1,0 +1,101 @@
+"""Miss-ratio curves and the paper's hit-ratio step function H_i(c).
+
+Paper Alg. 2: ``H_i(c)`` is a non-decreasing step function of cache size —
+for an LRU cache of ``c`` blocks, an access with reuse distance ``d`` hits
+iff ``d < c`` (Mattson stack inclusion).  The breakpoints ``m_1 < ... < m_k``
+are the distinct observed reuse distances (+1), the plateau values ``h_k``
+the cumulative fraction of accesses whose distance falls below each
+breakpoint.
+
+For URD-based curves the numerator counts only read re-uses (the useful
+hits); the denominator is all accesses, matching the paper's use of ``h`` in
+Eq. 2 (a latency-weighted mean over the whole request stream).
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+
+import numpy as np
+
+from repro.core.reuse_distance import RDResult
+
+__all__ = ["HitRatioFunction", "build_hit_ratio_function"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HitRatioFunction:
+    """Piecewise-constant h(c): h(c) = heights[k] for c in [edges[k], edges[k+1]).
+
+    edges:   int64[k+1], edges[0] == 0, strictly increasing.
+    heights: float64[k], non-decreasing, heights[-1] == max achievable hit
+             ratio (at c >= edges[-1] the curve stays flat at heights[-1]).
+    n_accesses: denominator used (for latency weighting across tenants).
+    """
+
+    edges: np.ndarray
+    heights: np.ndarray
+    n_accesses: int
+
+    def __call__(self, c: float | np.ndarray) -> np.ndarray | float:
+        c_arr = np.asarray(c)
+        idx = np.searchsorted(self.edges, c_arr, side="right") - 1
+        idx = np.clip(idx, 0, len(self.heights) - 1)
+        out = self.heights[idx]
+        out = np.where(c_arr <= 0, 0.0, out)
+        return float(out) if np.isscalar(c) or c_arr.ndim == 0 else out
+
+    @property
+    def max_useful_size(self) -> int:
+        """Smallest c achieving the maximum hit ratio (== URD-based size)."""
+        return int(self.edges[-1])
+
+    @property
+    def max_hit_ratio(self) -> float:
+        return float(self.heights[-1]) if len(self.heights) else 0.0
+
+    def breakpoints(self) -> list[tuple[int, float]]:
+        """(cache size, hit ratio) pairs at each step, for greedy allocation."""
+        return [(int(e), float(h)) for e, h in zip(self.edges, self.heights)]
+
+    def interp(self, c: np.ndarray) -> np.ndarray:
+        """Piecewise-linear relaxation (for the smooth PGD solver)."""
+        return np.interp(c, self.edges.astype(np.float64),
+                         self.heights.astype(np.float64))
+
+    def marginal_gain(self, c: int) -> tuple[int, float]:
+        """From size c: (next breakpoint size, hit-ratio gain going there).
+
+        Returns (c, 0.0) when the curve is already saturated.
+        """
+        k = bisect.bisect_right(list(self.edges), c)
+        if k >= len(self.edges):
+            return c, 0.0
+        nxt = int(self.edges[k])
+        cur = self(c)
+        return nxt, float(self.heights[min(k, len(self.heights) - 1)] - cur)
+
+
+def build_hit_ratio_function(rd: RDResult, n_accesses: int | None = None,
+                             max_size: int | None = None) -> HitRatioFunction:
+    """Construct H(c) from reuse-distance samples.
+
+    An access with sampled distance d hits an LRU cache of size c iff
+    d + 1 <= c.  Cold accesses and (for URD) write re-touches never hit.
+    """
+    samples = rd.samples
+    n = int(n_accesses if n_accesses is not None else rd.distances.shape[0])
+    n = max(n, 1)
+    if samples.size == 0:
+        return HitRatioFunction(np.array([0], dtype=np.int64),
+                                np.array([0.0]), n)
+    if max_size is not None:
+        samples = samples[samples + 1 <= max_size]
+        if samples.size == 0:
+            return HitRatioFunction(np.array([0], dtype=np.int64),
+                                    np.array([0.0]), n)
+    sizes, counts = np.unique(samples + 1, return_counts=True)
+    heights = np.cumsum(counts) / n
+    edges = np.concatenate([[0], sizes]).astype(np.int64)
+    heights_full = np.concatenate([[0.0], heights])
+    return HitRatioFunction(edges, heights_full, n)

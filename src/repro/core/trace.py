@@ -1,0 +1,157 @@
+"""Block-access trace representation and request-type classification.
+
+The paper's entire analysis operates on an abstract trace of
+``(tenant, block_address, is_read)`` events (its Monitor extracts exactly
+this from blktrace).  In this framework the same events are emitted by the
+paged-KV serving runtime (a "read" = re-use of a cached KV page, a "write" =
+admission of a freshly computed page); the math below is identical.
+
+Request-type taxonomy (paper §4, Fig. 6):
+
+  first touch of an address:   CR (cold read) / CW (cold write)
+  re-touch, classified by (previous type, current type):
+      RAR  read  after read
+      RAW  read  after write
+      WAR  write after read
+      WAW  write after write
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+__all__ = [
+    "AccessClass",
+    "Trace",
+    "classify_accesses",
+    "request_type_mix",
+    "total_cache_writes_wb",
+]
+
+
+class AccessClass(enum.IntEnum):
+    """Per-access classification codes (stable ints: used in arrays)."""
+
+    CR = 0   # cold read
+    CW = 1   # cold write
+    RAR = 2  # read after read
+    RAW = 3  # read after write
+    WAR = 4  # write after read
+    WAW = 5  # write after write
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """A single tenant's block-access trace.
+
+    Attributes:
+      addrs:    int64[n]  block addresses (opaque ids).
+      is_read:  bool[n]   True = read, False = write.
+      name:     workload label (e.g. ``wdev_0``).
+    """
+
+    addrs: np.ndarray
+    is_read: np.ndarray
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        if self.addrs.shape != self.is_read.shape:
+            raise ValueError(
+                f"addrs {self.addrs.shape} vs is_read {self.is_read.shape}")
+        if self.addrs.ndim != 1:
+            raise ValueError("trace arrays must be 1-D")
+
+    def __len__(self) -> int:
+        return int(self.addrs.shape[0])
+
+    @property
+    def n_unique(self) -> int:
+        return int(np.unique(self.addrs).size)
+
+    def slice(self, start: int, stop: int) -> "Trace":
+        return Trace(self.addrs[start:stop], self.is_read[start:stop], self.name)
+
+    def concat(self, other: "Trace") -> "Trace":
+        return Trace(
+            np.concatenate([self.addrs, other.addrs]),
+            np.concatenate([self.is_read, other.is_read]),
+            self.name,
+        )
+
+
+def _prev_occurrence(addrs: np.ndarray) -> np.ndarray:
+    """prev[i] = index of the previous access to addrs[i], or -1."""
+    n = addrs.shape[0]
+    prev = np.full(n, -1, dtype=np.int64)
+    last: dict[int, int] = {}
+    for i in range(n):
+        a = int(addrs[i])
+        p = last.get(a, -1)
+        prev[i] = p
+        last[a] = i
+    return prev
+
+
+def prev_next_occurrence(addrs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized prev/next occurrence indices per position.
+
+    prev[i] = largest j < i with addrs[j] == addrs[i], else -1.
+    nxt[j]  = smallest i > j with addrs[i] == addrs[j], else n.
+
+    O(n log n) via stable argsort on (addr, position).
+    """
+    n = addrs.shape[0]
+    order = np.argsort(addrs, kind="stable")  # groups equal addrs, pos asc
+    sorted_addrs = addrs[order]
+    same_as_prev = np.zeros(n, dtype=bool)
+    same_as_prev[1:] = sorted_addrs[1:] == sorted_addrs[:-1]
+
+    prev = np.full(n, -1, dtype=np.int64)
+    # within each addr-group, prev of order[k] is order[k-1]
+    prev[order[1:]] = np.where(same_as_prev[1:], order[:-1], -1)
+
+    nxt = np.full(n, n, dtype=np.int64)
+    same_as_next = np.zeros(n, dtype=bool)
+    same_as_next[:-1] = sorted_addrs[1:] == sorted_addrs[:-1]
+    nxt[order[:-1]] = np.where(same_as_next[:-1], order[1:], n)
+    return prev, nxt
+
+
+def classify_accesses(trace: Trace) -> np.ndarray:
+    """Return AccessClass code per access (paper Fig. 6 taxonomy)."""
+    prev, _ = prev_next_occurrence(trace.addrs)
+    is_read = trace.is_read
+    cold = prev < 0
+    prev_read = np.zeros(len(trace), dtype=bool)
+    hot = ~cold
+    prev_read[hot] = is_read[prev[hot]]
+
+    out = np.empty(len(trace), dtype=np.int64)
+    out[cold & is_read] = AccessClass.CR
+    out[cold & ~is_read] = AccessClass.CW
+    out[hot & is_read & prev_read] = AccessClass.RAR
+    out[hot & is_read & ~prev_read] = AccessClass.RAW
+    out[hot & ~is_read & prev_read] = AccessClass.WAR
+    out[hot & ~is_read & ~prev_read] = AccessClass.WAW
+    return out
+
+
+def request_type_mix(trace: Trace) -> dict[str, float]:
+    """Fraction of each AccessClass in the trace (paper Fig. 12)."""
+    codes = classify_accesses(trace)
+    n = max(len(trace), 1)
+    return {c.name: float(np.sum(codes == c)) / n for c in AccessClass}
+
+
+def total_cache_writes_wb(trace: Trace) -> int:
+    """Paper Eq. 3: TotalWrites = CR + CW + WAR + WAW under the WB policy.
+
+    Every cold access installs a block (1 SSD write); every write re-touch
+    modifies a cached block (1 SSD write).  RAR/RAW re-touches are pure reads.
+    """
+    codes = classify_accesses(trace)
+    mask = np.isin(codes, [AccessClass.CR, AccessClass.CW,
+                           AccessClass.WAR, AccessClass.WAW])
+    return int(np.sum(mask))

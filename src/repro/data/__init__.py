@@ -1,0 +1,1 @@
+"""Data substrate: synthetic LM pipeline + block-trace generators."""

@@ -1,0 +1,1 @@
+"""Mesh/axis sharding rules, collective compression, pipeline parallelism."""

@@ -1,0 +1,100 @@
+"""Activation-sharding context: sequence parallelism without threading
+mesh objects through every model function.
+
+``activation_rules`` installs named NamedShardings (e.g. "act" → scan-carry
+hidden states sharded [DP, model, None]); ``constrain`` is a no-op unless a
+rule is installed, so single-device tests/smoke runs never touch GSPMD.
+
+SP rationale: with ``lax.scan`` + remat, the dominant residual is the per-
+layer carry h [B, S, d].  Sharding its sequence axis over ``model`` cuts the
+stored bytes by the TP degree; GSPMD inserts the all-gather at attention
+entry and the reduce-scatter after wo — the standard Megatron-SP schedule.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["activation_rules", "constrain", "current_rules"]
+
+_RULES: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "activation_rules", default=None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: dict):
+    """rules: name -> NamedSharding (or PartitionSpec under a mesh ctx)."""
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def current_rules() -> dict | None:
+    return _RULES.get()
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    rules = _RULES.get()
+    if not rules or name not in rules:
+        return x
+    sh = rules[name]
+    spec = getattr(sh, "spec", None)
+    mesh = getattr(sh, "mesh", None)
+    if spec is not None and mesh is not None:
+        # drop axes that do not divide the dim (safety across arch shapes)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        fixed = []
+        for i, entry in enumerate(tuple(spec) + (None,) * (x.ndim - len(spec))):
+            if entry is None or i >= x.ndim:
+                fixed.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            total = 1
+            for a in axes:
+                total *= sizes.get(a, 1)
+            fixed.append(entry if x.shape[i] % total == 0 else None)
+        sh = NamedSharding(mesh, P(*fixed[:x.ndim]))
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def default_decode_rules(mesh) -> dict:
+    """Decode-only rules: weight-stationary MLP (§Perf iteration D2).
+
+    One decode token per sequence makes activations ~1000× smaller than the
+    weights; re-sharding the MLP input's d_model over ``data`` lets every
+    FSDP shard contract its resident weight slice (partial-sum all-reduce of
+    a few MB of activations) instead of all-gathering hundreds of MB of
+    weights per layer."""
+    return {"dec_mlp": NamedSharding(mesh, P(None, None, "data"))}
+
+
+def default_train_rules(mesh, *, sp: bool = True,
+                        attn_heads: bool = True) -> dict:
+    """Baseline rules for train/prefill: DP batch, optional SP sequence.
+
+    ``attn_heads`` adds head-sharded q/k/v constraints inside attention so
+    the sequence all-gather happens once per layer (Megatron-SP schedule)
+    instead of inside every flash tile iteration (§Perf iteration 1).
+    """
+    from repro.distributed.sharding import DP
+    dp = DP(mesh)
+    seq = "model" if sp else None
+    rules = {"act": NamedSharding(mesh, P(dp, seq, None))}
+    if attn_heads:
+        rules["attn_qkv"] = NamedSharding(mesh, P(dp, None, "model", None))
+    if sp:
+        # explicit Megatron-SP schedule: one seq all-gather at block entry,
+        # ff/head-sharded intermediates, seq-sharded residual carry.  Without
+        # these, GSPMD hits a model-axis double-use conflict in the MLP
+        # backward (seq-sharded activations × ff-sharded weights) and
+        # resolves it by all-gathering FULL weights per layer (§Perf T5).
+        rules["gathered"] = NamedSharding(mesh, P(dp, None, None))
+        rules["mlp_mid"] = NamedSharding(mesh, P(dp, None, "model"))
+    # grouped MoE buffers [B(groups), E, c, d]: groups over DP, experts EP
+    rules["moe_xe"] = NamedSharding(mesh, P(dp, "model", None, None))
+    return rules

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the performance-critical hot spots.
+
+Each subpackage ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper with interpret fallback on CPU) and ref.py (pure-jnp
+oracle used by the allclose test sweeps).
+"""

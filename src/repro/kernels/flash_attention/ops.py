@@ -1,0 +1,35 @@
+"""Jit'd public wrapper for flash attention.
+
+On TPU this lowers the Pallas kernel; elsewhere (this CPU container) it runs
+the kernel body in interpret mode, or falls back to the jnp reference for
+speed when ``interpret=False`` is requested off-TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention_op"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                                   "use_kernel"))
+def flash_attention_op(q, k, v, *, causal: bool = True, window: int = 0,
+                       block_q: int = 128, block_kv: int = 128,
+                       use_kernel: bool | None = None):
+    """q/k/v: [B, H, S, D] (GQA pre-repeated) -> [B, H, Sq, Dv]."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_kv=block_kv,
+                               interpret=not _on_tpu())
+    return attention_ref(q, k, v, causal=causal, window=window)

@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the SSD chunked scan."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.mamba2_ssd.kernel import mamba2_ssd
+from repro.kernels.mamba2_ssd.ref import mamba2_ssd_ref, seg_from_dA
+
+__all__ = ["mamba2_ssd_op"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "use_kernel"))
+def mamba2_ssd_op(x_dt, B, C, dA, *, chunk: int = 256,
+                  use_kernel: bool | None = None):
+    """x_dt [BH,S,P], B/C [BH,S,N], dA [BH,S] -> y [BH,S,P]."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        seg = seg_from_dA(dA, chunk)
+        return mamba2_ssd(x_dt, B, C, seg, chunk=chunk,
+                          interpret=not _on_tpu())
+    return mamba2_ssd_ref(x_dt, B, C, dA)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the SSD chunked scan: sequential recurrence.
+
+y_t = C_t · h_t + (skip handled by caller);  h_t = h_{t-1}·exp(dA_t) + B_t x_t
+with x already premultiplied by dt.  ``seg`` is the within-chunk cumsum of
+dA; the sequential reference reconstructs per-step dA from seg diffs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["mamba2_ssd_ref", "seg_from_dA"]
+
+
+def seg_from_dA(dA: jax.Array, chunk: int) -> jax.Array:
+    """[BH, S] per-step dA -> within-chunk cumsum [BH, S, 1]."""
+    BH, S = dA.shape
+    nc = S // chunk
+    seg = jnp.cumsum(dA.reshape(BH, nc, chunk), axis=-1)
+    return seg.reshape(BH, S, 1)
+
+
+def mamba2_ssd_ref(x_dt: jax.Array, B: jax.Array, C: jax.Array,
+                   dA: jax.Array) -> jax.Array:
+    """Sequential scan oracle.  x_dt [BH,S,P], B/C [BH,S,N], dA [BH,S]."""
+    BH, S, P = x_dt.shape
+    N = B.shape[-1]
+
+    def step(h, inp):
+        x_t, b_t, c_t, da_t = inp
+        h = h * jnp.exp(da_t)[:, None, None] \
+            + jnp.einsum("bn,bp->bnp", b_t, x_t)
+        y = jnp.einsum("bn,bnp->bp", c_t, h)
+        return h, y
+
+    h0 = jnp.zeros((BH, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (x_dt.astype(jnp.float32).transpose(1, 0, 2),
+         B.astype(jnp.float32).transpose(1, 0, 2),
+         C.astype(jnp.float32).transpose(1, 0, 2),
+         dA.astype(jnp.float32).T))
+    return ys.transpose(1, 0, 2).astype(x_dt.dtype)

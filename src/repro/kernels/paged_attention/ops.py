@@ -1,0 +1,26 @@
+"""Jit'd wrapper for paged decode attention (TPU kernel / CPU fallback)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+__all__ = ["paged_attention_op"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def paged_attention_op(q, k_pages, v_pages, block_tables, seq_lens, *,
+                       use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return paged_attention(q, k_pages, v_pages, block_tables, seq_lens,
+                               interpret=not _on_tpu())
+    return paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: gather pages into a dense cache, run masked attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["paged_attention_ref", "gather_pages"]
+
+
+def gather_pages(pages: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """[n_pool, page, H, D] + [B, n_per_seq] -> dense [B, S_max, H, D]."""
+    gathered = pages[block_tables]          # [B, n_per_seq, page, H, D]
+    B, n, p, H, D = gathered.shape
+    return gathered.reshape(B, n * p, H, D)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, seq_lens, *,
+                        scale: float | None = None):
+    if scale is None:
+        scale = 1.0 / np.sqrt(q.shape[-1])
+    k = gather_pages(k_pages, block_tables)       # [B, S, Hkv, D]
+    v = gather_pages(v_pages, block_tables)
+    B, S, Hkv, D = k.shape
+    Hq = q.shape[1]
+    rep = Hq // Hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, :] < seq_lens[:, None, None]
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

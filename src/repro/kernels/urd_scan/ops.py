@@ -1,0 +1,49 @@
+"""Jit'd wrapper: trace -> reuse-distance samples on accelerator.
+
+``reuse_distances_accel`` is the production Analyzer path: prev/next links
+are computed with an O(n log n) host sort, the O(n²/tile) counting runs on
+the TPU (kernel) or via the jnp oracle on CPU.  Matches
+``repro.core.reuse_distance.reuse_distances`` exactly (tested).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.reuse_distance import RDResult
+from repro.core.trace import Trace, prev_next_occurrence
+from repro.kernels.urd_scan.kernel import urd_scan
+from repro.kernels.urd_scan.ref import urd_scan_ref
+
+__all__ = ["urd_scan_op", "reuse_distances_accel"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def urd_scan_op(prev, nxt, *, use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return urd_scan(prev, nxt, interpret=not _on_tpu())
+    return urd_scan_ref(prev, nxt)
+
+
+def reuse_distances_accel(trace: Trace, kind: str = "urd",
+                          use_kernel: bool | None = None) -> RDResult:
+    """Accelerated drop-in for ``core.reuse_distance.reuse_distances``."""
+    prev, nxt = prev_next_occurrence(trace.addrs)
+    counts = np.asarray(urd_scan_op(jnp.asarray(prev, jnp.int32),
+                                    jnp.asarray(nxt, jnp.int32),
+                                    use_kernel=use_kernel))
+    out = np.full(len(trace), -1, dtype=np.int64)
+    mask = prev >= 0
+    if kind == "urd":
+        mask &= trace.is_read
+    out[mask] = counts[mask]
+    return RDResult(out, kind)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the reuse-distance counting kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["urd_scan_ref"]
+
+
+def urd_scan_ref(prev: jax.Array, nxt: jax.Array) -> jax.Array:
+    """counts[i] = #{ j : prev[i] < j < i, nxt[j] >= i } (dense O(n²))."""
+    n = prev.shape[0]
+    i_idx = jnp.arange(n)[:, None]
+    j_idx = jnp.arange(n)[None, :]
+    contrib = ((j_idx > prev[:, None]) & (j_idx < i_idx)
+               & (nxt[None, :] >= i_idx))
+    return jnp.sum(contrib, axis=1).astype(jnp.int32)

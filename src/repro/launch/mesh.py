@@ -1,0 +1,49 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+``xla_force_host_platform_device_count`` before any jax initialization.
+
+Topology mapping (TPU v5e target):
+  * ``model`` (16) — intra-pod ICI ring: TP/EP/SP collectives.
+  * ``data`` (16)  — intra-pod ICI: FSDP all-gathers + DP grad reduce.
+  * ``pod`` (2+)   — inter-pod DCN: only DP gradient all-reduce
+    (optionally int8-compressed, ``repro.optim.compression``) or pipeline
+    stage boundaries cross it.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_test_mesh", "dp_axes"]
+
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run must set xla_force_host_platform_device_count first")
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(shape), axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for CPU tests (requires host-device override)."""
+    shape = (pod, data, model) if pod else (data, model)
+    axes = (("pod", "data", "model") if pod else ("data", "model"))
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(
+        np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Data-parallel axes: ('pod','data') when the pod axis exists."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,50 @@
+"""Render §Dry-run / §Roofline markdown tables from results/dryrun.json.
+
+    PYTHONPATH=src python -m repro.launch.report [--results path]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK = 197e12
+
+
+def render(path: str, mesh: str = "16x16") -> str:
+    with open(path) as f:
+        data = [d for d in json.load(f)
+                if d.get("ok") and d["mesh"] == mesh and not d.get("tag")]
+    data.sort(key=lambda d: (d["arch"], d["shape"]))
+    out = ["| arch | shape | kind | compute s | memory s | collective s | "
+           "bound | roofline frac | model/HLO | HBM fit |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for d in data:
+        r = d["roofline_s"]
+        pd = d["per_device"]
+        dom = max(r, key=r.get)
+        tot = max(max(r.values()), 1e-30)
+        # roofline fraction: useful-compute time / dominant-term time
+        frac = (pd["model_flops"] / PEAK) / tot
+        temp = (pd["temp_bytes"] or 0) / 1e9
+        fit = "yes" if temp < 16 else f"~{temp:.0f}G*"
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['kind']} | "
+            f"{r['compute']:.2e} | {r['memory']:.2e} | "
+            f"{r['collective']:.2e} | {dom} | {frac:.1%} | "
+            f"{d['model_flops_ratio']:.2f} | {fit} |")
+    return "\n".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    default = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun.json")
+    ap.add_argument("--results", default=default)
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    print(render(args.results, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""ShapeDtypeStruct input specs + step functions for every dry-run cell.
+
+``input_specs(arch, shape)`` builds weak-type-correct, shardable stand-ins
+for every model input with **zero device allocation** (``jax.eval_shape``
+over the real init/loss functions), so lowering a 104B model on a CPU host
+is free.
+
+``make_step(arch, shape)`` returns the jittable step for the cell's kind:
+  train_*   -> train_step(state, batch)
+  prefill_* -> prefill(params, batch)         (last-position logits)
+  decode_* / long_* -> serve_step(params, tokens, cache)  (1 new token)
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.config import Family, ModelConfig, SHAPES, ShapeConfig
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+
+__all__ = ["CellSpec", "build_cell", "ENC_DECODE_CROSS_LEN"]
+
+SDS = jax.ShapeDtypeStruct
+TP_DEGREE = 16                       # production model-axis size
+ENC_DECODE_CROSS_LEN = 4096          # enc-dec decode: encoder output length
+ENC_TRAIN_RATIO = 1                  # enc len == dec len for train/prefill
+
+
+@dataclasses.dataclass
+class CellSpec:
+    arch: str
+    shape: ShapeConfig
+    cfg: ModelConfig
+    step_fn: object                 # jittable callable
+    args: tuple                     # ShapeDtypeStruct pytrees
+    kind: str                       # train | prefill | decode
+
+
+def _eval_sds(fn, *a, **k):
+    return jax.eval_shape(fn, *a, **k)
+
+
+def _params_sds(cfg: ModelConfig, tp: int):
+    key = SDS((2,), jnp.uint32)
+    return _eval_sds(lambda k: M.init_params(cfg, k, tp=tp), key)
+
+
+def build_cell(arch: str, shape_name: str, *, tp: int = TP_DEGREE,
+               remat: str | None = "full", microbatches: int = 1,
+               commit: bool = False, grad_shardings=None,
+               dp_total: int | None = None) -> CellSpec:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if remat is not None and shape.kind == "train":
+        cfg = dataclasses.replace(cfg, remat=remat)
+    B, S = shape.global_batch, shape.seq_len
+    params = _params_sds(cfg, tp)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig()
+        step = make_train_step(cfg, opt_cfg, tp=tp,
+                               microbatches=microbatches,
+                               grad_shardings=grad_shardings)
+        state = _eval_sds(init_train_state, params)
+        batch = {"tokens": SDS((B, S), jnp.int32),
+                 "labels": SDS((B, S), jnp.int32)}
+        if cfg.family == Family.ENCDEC:
+            batch["enc_embeds"] = SDS((B, S * ENC_TRAIN_RATIO, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+        return CellSpec(arch, shape, cfg, step, (state, batch), "train")
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return M.prefill(params, cfg, batch["tokens"], tp,
+                             enc_embeds=batch.get("enc_embeds"))
+        batch = {"tokens": SDS((B, S if cfg.family != Family.ENCDEC
+                                else S // 8), jnp.int32)}
+        if cfg.family == Family.ENCDEC:
+            batch["enc_embeds"] = SDS((B, S, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+        return CellSpec(arch, shape, cfg, prefill_step, (params, batch),
+                        "prefill")
+
+    # decode: one new token against a seq_len-deep cache.  The production
+    # path keeps the sequence-sharded cache FROZEN (split-KV + lse merge;
+    # KV deltas returned for the serving loop's separate batched commit) —
+    # §Perf iteration D1.  commit=True is the naive baseline.
+    def serve_step(params, tokens, cache):
+        return M.decode_step(params, cfg, tokens, cache, tp,
+                             commit=commit)
+
+    enc_len = ENC_DECODE_CROSS_LEN if cfg.family == Family.ENCDEC else 0
+    cache = _eval_sds(
+        lambda: M.init_decode_cache(cfg, B, S, tp=tp, enc_len=enc_len))
+    tokens = SDS((B,), jnp.int32)
+    return CellSpec(arch, shape, cfg, serve_step, (params, tokens, cache),
+                    "decode")

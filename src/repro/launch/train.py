@@ -1,0 +1,57 @@
+"""Production training launcher: ``--arch <id>`` on the production mesh.
+
+On real hardware this runs the pjit train step across the pod(s); on this
+CPU container ``--dry-run`` lowers+compiles only (see ``dryrun.py`` for the
+full sweep) and ``--local`` runs a reduced config end-to-end.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b --local
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.data.lm import SyntheticLM
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig
+from repro.train.steps import init_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--local", action="store_true",
+                    help="run the reduced smoke config on local devices")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.local else get_config(args.arch)
+    print(f"arch={cfg.name} params~{cfg.n_params() / 1e6:.0f}M "
+          f"active~{cfg.n_active_params() / 1e6:.0f}M")
+
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(total_steps=args.steps)
+    step = jax.jit(make_train_step(cfg, opt_cfg,
+                                   microbatches=args.microbatches),
+                   donate_argnums=(0,))
+    state = init_train_state(params)
+    seq = 64 if args.local else 4096
+    batch = 8 if args.local else 256
+    enc = cfg.d_model if cfg.family.value == "encdec" else None
+    data = SyntheticLM(cfg.vocab_size, seq, batch, seed=0,
+                       enc_dim=enc, enc_len=seq)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=25,
+                         ckpt_dir=args.ckpt_dir)
+    out = Trainer(step, state, data, tcfg).run()
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

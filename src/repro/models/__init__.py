@@ -1,0 +1,1 @@
+"""Model zoo: dense/MoE/SSM/hybrid/enc-dec LMs for the assigned pool."""

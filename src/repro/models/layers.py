@@ -1,0 +1,296 @@
+"""Shared neural layers: norms, RoPE, blockwise attention, SwiGLU, MoE.
+
+Pure-jnp implementations built for TPU lowering:
+  * attention is *blockwise* (online-softmax over KV chunks inside
+    ``lax.scan``) so 32k-sequence prefill never materializes an S×S score
+    tensor — the XLA path mirrors the Pallas flash kernel's tiling;
+  * sliding-window attention only visits the KV blocks inside the window;
+  * MoE uses capacity-based one-hot dispatch einsums (GShard-style) so
+    expert parallelism shards cleanly over the ``model`` mesh axis.
+
+All matmuls accumulate in fp32 (``preferred_element_type``) with bf16
+operands, matching MXU semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "rms_norm", "apply_rope", "rope_freqs", "blockwise_attention",
+    "decode_attention", "swiglu", "moe_ffn", "dense_init", "Param",
+]
+
+Array = jax.Array
+_F32 = jnp.float32
+
+
+# --------------------------------------------------------------------- init
+def dense_init(key: Array, shape: tuple[int, ...], dtype,
+               scale: float | None = None) -> Array:
+    """Truncated-normal fan-in init (LM standard)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, _F32)
+            * std).astype(dtype)
+
+
+Param = dict  # nested-dict parameter trees
+
+
+# -------------------------------------------------------------------- norms
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dtype = x.dtype
+    x = x.astype(_F32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(_F32))).astype(dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=_F32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, H, D] (D even), positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # [D/2]
+    angles = positions[..., None].astype(_F32) * freqs  # [..., S, D/2]
+    cos = jnp.cos(angles)[..., None, :]                # [..., S, 1, D/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(_F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+def _attn_block(q, k, v, *, mask, scale):
+    """One (q-block, kv-block) tile: returns (scores_max, exp-sums, pv)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=_F32) * scale
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1)                            # [b,h,q]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)                            # [b,h,q]
+    pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
+                    preferred_element_type=_F32)
+    return m, l, pv
+
+
+def blockwise_attention(q: Array, k: Array, v: Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 512, block_kv: int = 512,
+                        scale: float | None = None) -> Array:
+    """Memory-bounded attention: online softmax over KV blocks.
+
+    q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, Dk/Dv] with Hq % Hkv == 0.
+    Never materializes more than [B, H, block_q, block_kv] scores.
+    Causal blocks beyond the diagonal (and outside the SWA window) are
+    *visited but fully masked*; the Pallas kernel and the triangular
+    schedule (§Perf) skip them.
+    """
+    from repro.distributed.ctx import constrain
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    Dv = v.shape[-1]
+    if scale is None:
+        scale = 1.0 / np.sqrt(D)
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    # head-sharded, sequence-gathered inside attention (one all-gather per
+    # layer instead of per flash tile — Megatron-SP schedule)
+    q = constrain(q, "attn_qkv")
+    k = constrain(k, "attn_qkv")
+    v = constrain(v, "attn_qkv")
+
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    nq = -(-Sq // block_q)
+    nk = -(-Skv // block_kv)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_kv - Skv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    qb = q.reshape(B, nq, block_q, Hq, D).transpose(1, 0, 2, 3, 4)
+    kb = k.reshape(B, nk, block_kv, Hq, D).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nk, block_kv, Hq, Dv).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.arange(nq * block_q).reshape(nq, block_q)
+    k_pos = jnp.arange(nk * block_kv).reshape(nk, block_kv)
+    valid_k = (k_pos < Skv)
+
+    def per_q_block(qi, q_tile):
+        # scan over kv blocks with running (m, l, acc)
+        m0 = jnp.full((B, Hq, block_q), -1e30, _F32)
+        l0 = jnp.zeros((B, Hq, block_q), _F32)
+        a0 = jnp.zeros((B, block_q, Hq, Dv), _F32)
+
+        # rematerialized tile body: the [B,H,bq,bk] fp32 score/prob tiles
+        # are recomputed in the backward pass (flash-attention semantics)
+        # instead of being stored per (q,kv) tile pair.
+        @jax.checkpoint
+        def body(carry, inputs):
+            m_prev, l_prev, acc = carry
+            k_tile, v_tile, kp, kv_valid = inputs
+            mask = kv_valid[None, None, None, :]
+            if causal:
+                mask = mask & (kp[None, None, None, :]
+                               <= q_pos[qi][None, None, :, None])
+            if window > 0:
+                mask = mask & (kp[None, None, None, :]
+                               > q_pos[qi][None, None, :, None] - window)
+            m_blk, l_blk, pv = _attn_block(q_tile, k_tile, v_tile,
+                                           mask=mask, scale=scale)
+            m_new = jnp.maximum(m_prev, m_blk)
+            c_prev = jnp.exp(m_prev - m_new)
+            c_blk = jnp.exp(m_blk - m_new)
+            l_new = l_prev * c_prev + l_blk * c_blk
+            acc = acc * c_prev.transpose(0, 2, 1)[..., None] \
+                + pv * c_blk.transpose(0, 2, 1)[..., None]
+            return (m_new, l_new, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      (kb, vb, k_pos, valid_k))
+        out = acc / jnp.maximum(l.transpose(0, 2, 1)[..., None], 1e-30)
+        return out.astype(q.dtype)
+
+    out_blocks = jax.lax.map(
+        lambda args: jax.checkpoint(per_q_block)(*args),
+        (jnp.arange(nq), qb))
+    out = out_blocks.transpose(1, 0, 2, 3, 4).reshape(B, nq * block_q, Hq, Dv)
+    return out[:, :Sq]
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cache_len: Array, *, window: int = 0,
+                     scale: float | None = None) -> Array:
+    """Single-step decode: q [B, 1, Hq, D] over caches [B, Smax, Hkv, D].
+
+    ``cache_len`` [B] masks the valid prefix.  The fp32 softmax runs over
+    the (possibly sharded) Smax axis — GSPMD turns the reductions into the
+    split-KV (flash-decoding) schedule when Smax is sharded over ``model``.
+    """
+    B, Smax, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    if scale is None:
+        scale = 1.0 / np.sqrt(q.shape[-1])
+    rep = Hq // Hkv
+    if rep > 1:
+        k_cache = jnp.repeat(k_cache, rep, axis=2)
+        v_cache = jnp.repeat(v_cache, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_cache,
+                   preferred_element_type=_F32) * scale
+    pos = jnp.arange(Smax)[None, None, None, :]
+    mask = pos < cache_len[:, None, None, None]
+    if window > 0:
+        mask = mask & (pos >= cache_len[:, None, None, None] - window)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=_F32)
+    return out.astype(q.dtype)
+
+
+# -------------------------------------------------------------------- FFNs
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    from repro.distributed.ctx import constrain
+    g = jnp.einsum("bsd,df->bsf", x, w_gate, preferred_element_type=_F32)
+    u = jnp.einsum("bsd,df->bsf", x, w_up, preferred_element_type=_F32)
+    h = constrain((jax.nn.silu(g) * u).astype(x.dtype), "mlp_mid")
+    return jnp.einsum("bsf,fd->bsd", h, w_down,
+                      preferred_element_type=_F32).astype(x.dtype)
+
+
+def moe_ffn(x: Array, p: Param, cfg: ModelConfig, *, ep: int = 1) -> Array:
+    """Capacity-based top-k MoE — *grouped local* dispatch (GShard groups).
+
+    x: [B, S, d].  Each batch row is a routing group: router, position
+    cumsum, capacity and the scatter/gather all happen *within* a group, so
+    dispatch needs no cross-device coordination (a global-token position
+    cumsum serializes across shards — GSPMD resolved it by all-reducing
+    multi-GB fp32 expert buffers per layer; §Perf iterations M1/M2).
+    Expert buffers [B(groups), E, c, d] shard (data, model, …): every
+    device computes its (group-shard × expert-shard) GEMM block locally.
+
+    Experts are padded to a multiple of the EP degree; padded experts get
+    -inf router logits so they never receive tokens.  Capacity is
+    per-group: c = ceil(cf · S · k / E) (standard GShard semantics).
+    """
+    from repro.distributed.ctx import constrain
+    B, S, d = x.shape
+    E = p["w_gate"].shape[0]                    # padded expert count
+    k = cfg.top_k
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"],
+                        preferred_element_type=_F32)
+    if E > cfg.n_experts:                       # mask padded experts
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    gates, idx = jax.lax.top_k(logits, k)       # [B,S,k]
+    gates = jax.nn.softmax(gates, axis=-1)
+
+    capacity = max(int(np.ceil(cfg.capacity_factor * S * k / E)), 4)
+    onehot = jax.nn.one_hot(idx, E, dtype=_F32)               # [B,S,k,E]
+    per_tok = onehot.sum(2)                                   # [B,S,E]
+    pos = jnp.cumsum(per_tok, axis=1) - per_tok               # [B,S,E]
+    pos_k = jnp.einsum("bske,bse->bsk", onehot, pos).astype(jnp.int32)
+    keep = pos_k < capacity                                   # [B,S,k]
+    gates = jnp.where(keep, gates, 0.0)
+
+    # group-local scatter into [B, E*c, d] — dropped tokens use an
+    # out-of-bounds index with mode="drop"/fill (an explicit drop-slot
+    # concat on the expert-sharded axis forced full-tensor gathers: M4)
+    dest = jnp.where(keep, idx * capacity + pos_k, E * capacity)
+    src = jnp.broadcast_to(x[:, :, None, :],
+                           (B, S, k, d)).reshape(B, S * k, d)
+    dflat = dest.reshape(B, S * k)
+
+    def row_scatter(dst_row, src_row):
+        buf = jnp.zeros((E * capacity, d), x.dtype)
+        return buf.at[dst_row].add(src_row, mode="drop")
+
+    xe = jax.vmap(row_scatter)(dflat, src)                    # [B,E*c,d]
+    xe = constrain(xe.reshape(B, E, capacity, d), "moe_xe")
+
+    # the CPU executor lacks a bf16×bf16→f32 thunk for batched dots: upcast
+    # operands off-TPU (tests); TPU lowering keeps bf16 MXU operands.
+    if jax.default_backend() == "tpu":
+        xe_op, wg, wu, wd = xe, p["w_gate"], p["w_up"], p["w_down"]
+    else:
+        xe_op = xe.astype(_F32)
+        wg, wu, wd = (p["w_gate"].astype(_F32), p["w_up"].astype(_F32),
+                      p["w_down"].astype(_F32))
+    g = jnp.einsum("becd,edf->becf", xe_op, wg,
+                   preferred_element_type=_F32)
+    u = jnp.einsum("becd,edf->becf", xe_op, wu,
+                   preferred_element_type=_F32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    ye = jnp.einsum("becf,efd->becd", h.astype(xe_op.dtype), wd,
+                    preferred_element_type=_F32).astype(x.dtype)
+    ye = constrain(ye, "moe_xe")
+
+    # group-local gather + gate combine (OOB -> 0, matching dropped gates)
+    ye_flat = ye.reshape(B, E * capacity, d)
+    y_tk = jnp.take_along_axis(ye_flat, dflat[:, :, None], axis=1,
+                               mode="fill", fill_value=0)
+    y = jnp.einsum("bskd,bsk->bsd",
+                   y_tk.reshape(B, S, k, d).astype(_F32),
+                   gates).astype(x.dtype)
+
+    if cfg.shared_d_ff:
+        y = y + swiglu(x, p["shared_gate"], p["shared_up"], p["shared_down"])
+    return y

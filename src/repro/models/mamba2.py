@@ -1,0 +1,218 @@
+"""Mamba-2 SSD (state-space duality) block — chunked-scan formulation.
+
+Implements the paper's (arXiv:2405.21060) chunkwise algorithm: within a
+chunk of Q tokens the SSM is evaluated as a masked quadratic attention-like
+product (MXU-friendly), across chunks a linear recurrence on the
+[H, P, N] state is carried by ``lax.scan``.  This is the TPU-native
+adaptation: the quadratic intra-chunk part maps to the MXU, the recurrence
+is O(S/Q) sequential — the same split the ``mamba2_ssd`` Pallas kernel uses.
+
+Decode keeps an O(1) recurrent state (conv window + SSM state): the
+"KV cache" of an SSM layer is a single page, which is why the paper's
+paged-cache technique applies only partially to this family (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Param, dense_init, rms_norm
+
+Array = jax.Array
+_F32 = jnp.float32
+
+__all__ = ["init_mamba2_layer", "mamba2_forward", "mamba2_decode_step",
+           "init_ssm_state"]
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_d_inner
+    n_heads = cfg.ssm_n_heads
+    conv_dim = d_inner + 2 * cfg.ssm_state      # x + B + C (n_groups = 1)
+    return d_inner, n_heads, conv_dim
+
+
+def init_mamba2_layer(key: Array, cfg: ModelConfig, dtype) -> Param:
+    d = cfg.d_model
+    d_inner, nh, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * cfg.ssm_state + nh
+    return {
+        "in_proj": dense_init(ks[0], (d, d_in_proj), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_dim), dtype,
+                             scale=1.0 / np.sqrt(cfg.ssm_conv)),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=_F32)),
+        "D": jnp.ones((nh,), _F32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (nh,), _F32)
+                    * (np.log(0.1) - np.log(1e-3)) + np.log(1e-3)))),
+        "out_proj": dense_init(ks[3], (d_inner, d), dtype),
+        "norm": jnp.zeros((d_inner,), _F32),
+    }
+
+
+def _conv1d_causal(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv: x [B,S,C], w [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return out + b[None, None, :]
+
+
+def _split_proj(zxbcdt: Array, cfg: ModelConfig):
+    d_inner, nh, _ = _dims(cfg)
+    N = cfg.ssm_state
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:2 * d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * d_inner + 2 * N:]
+    return z, xBC, dt
+
+
+def mamba2_forward(p: Param, x: Array, cfg: ModelConfig,
+                   use_kernel: bool | None = None) -> Array:
+    """x: [B, S, d] -> [B, S, d] (chunked SSD).
+
+    ``use_kernel=True`` routes the chunked scan through the
+    ``mamba2_ssd`` Pallas kernel (the TPU production path; interpret mode
+    off-TPU) — default: kernel on TPU, inline-jnp scan elsewhere.  Both
+    paths implement identical math (pinned by tests).
+    """
+    B_, S, d = x.shape
+    d_inner, nh, conv_dim = _dims(cfg)
+    N, P, Q = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_chunk
+    Q = min(Q, S)
+    assert S % Q == 0, f"seq {S} must be divisible by chunk {Q}"
+    nc = S // Q
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"],
+                        preferred_element_type=_F32).astype(x.dtype)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    xBC = jax.nn.silu(_conv1d_causal(xBC, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :d_inner].reshape(B_, S, nh, P)
+    Bm = xBC[..., d_inner:d_inner + N]                     # [B,S,N]
+    Cm = xBC[..., d_inner + N:]                            # [B,S,N]
+
+    dt = jax.nn.softplus(dt.astype(_F32) + p["dt_bias"][None, None, :])
+    A = -jnp.exp(p["A_log"])                               # [H]
+    dA = dt * A[None, None, :]                             # [B,S,H]
+
+    if use_kernel:
+        from repro.kernels.mamba2_ssd.kernel import mamba2_ssd
+        from repro.kernels.mamba2_ssd.ref import seg_from_dA
+        # flatten (batch, head) and broadcast the shared B/C per head
+        x_dt = (xs.astype(_F32) * dt[..., None]).transpose(0, 2, 1, 3) \
+            .reshape(B_ * nh, S, P)
+        Bh = jnp.broadcast_to(Bm.astype(_F32)[:, None], (B_, nh, S, N)) \
+            .reshape(B_ * nh, S, N)
+        Ch = jnp.broadcast_to(Cm.astype(_F32)[:, None], (B_, nh, S, N)) \
+            .reshape(B_ * nh, S, N)
+        dAh = dA.transpose(0, 2, 1).reshape(B_ * nh, S)
+        seg = seg_from_dA(dAh, Q)
+        y = mamba2_ssd(x_dt, Bh, Ch, seg, chunk=Q,
+                       interpret=jax.default_backend() != "tpu")
+        y = y.reshape(B_, nh, S, P).transpose(0, 2, 1, 3)
+        y = y + xs.astype(_F32) * p["D"][None, None, :, None]
+        y = y.reshape(B_, S, d_inner)
+        y = rms_norm((y * jax.nn.silu(z.astype(_F32))).astype(x.dtype),
+                     p["norm"], cfg.rms_eps)
+        return jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                          preferred_element_type=_F32).astype(x.dtype)
+
+    # chunk views
+    xs_c = xs.reshape(B_, nc, Q, nh, P)
+    B_c = Bm.reshape(B_, nc, Q, N).astype(_F32)
+    C_c = Cm.reshape(B_, nc, Q, N).astype(_F32)
+    dA_c = dA.reshape(B_, nc, Q, nh)
+    dt_c = dt.reshape(B_, nc, Q, nh)
+    seg = jnp.cumsum(dA_c, axis=2)                         # [B,nc,Q,H]
+
+    xdt = (xs_c.astype(_F32) * dt_c[..., None])            # [B,nc,Q,H,P]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # rematerialized: the [B,Q,Q,H] decay/score tiles are recomputed in the
+    # backward pass instead of being stored for every chunk.
+    @jax.checkpoint
+    def chunk_body(h_prev, inputs):
+        x_q, B_q, C_q, seg_q, xdt_q = inputs
+        # decay matrix L[i,j] = exp(seg_i - seg_j), i >= j
+        L = jnp.exp(jnp.clip(seg_q[:, :, None, :] - seg_q[:, None, :, :],
+                             -60.0, 0.0))                  # [B,Q,Q,H]
+        L = jnp.where(tri[None, :, :, None], L, 0.0)
+        scores = jnp.einsum("bin,bjn->bij", C_q, B_q,
+                            preferred_element_type=_F32)   # [B,Q,Q]
+        att = scores[..., None] * L                        # [B,Q,Q,H]
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, xdt_q)
+        # contribution of carried state
+        decay_in = jnp.exp(jnp.clip(seg_q, -60.0, 0.0))    # [B,Q,H]
+        y_inter = jnp.einsum("bin,bih,bhnp->bihp",
+                             C_q, decay_in, h_prev)
+        # new carried state
+        seg_last = seg_q[:, -1:, :]                        # [B,1,H]
+        decay_out = jnp.exp(jnp.clip(seg_last - seg_q, -60.0, 0.0))
+        s_new = jnp.einsum("bjn,bjh,bjhp->bhnp", B_q, decay_out, xdt_q)
+        h_new = h_prev * jnp.exp(jnp.clip(seg_last[:, 0, :], -60.0, 0.0)
+                                 )[:, :, None, None] + s_new
+        return h_new, y_intra + y_inter
+
+    h0 = jnp.zeros((B_, nh, N, P), _F32)
+    inputs = (xs_c.transpose(1, 0, 2, 3, 4), B_c.transpose(1, 0, 2, 3),
+              C_c.transpose(1, 0, 2, 3), seg.transpose(1, 0, 2, 3),
+              xdt.transpose(1, 0, 2, 3, 4))
+    _, y_c = jax.lax.scan(chunk_body, h0, inputs)          # [nc,B,Q,H,P]
+    y = y_c.transpose(1, 0, 2, 3, 4).reshape(B_, S, nh, P)
+    y = y + xs.astype(_F32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm((y * jax.nn.silu(z.astype(_F32))).astype(x.dtype),
+                 p["norm"], cfg.rms_eps)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                      preferred_element_type=_F32).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ decode
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_inner, nh, conv_dim = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_state, cfg.ssm_head_dim), _F32),
+    }
+
+
+def mamba2_decode_step(p: Param, x: Array, state: dict,
+                       cfg: ModelConfig) -> tuple[Array, dict]:
+    """x: [B, 1, d] one token; O(1) recurrent update."""
+    B_, _, d = x.shape
+    d_inner, nh, conv_dim = _dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"],
+                        preferred_element_type=_F32).astype(x.dtype)
+    z, xBC, dt = _split_proj(zxbcdt, cfg)
+    window = jnp.concatenate([state["conv"], xBC], axis=1)  # [B,K,conv]
+    conv_out = (jnp.einsum("bkc,kc->bc", window.astype(_F32),
+                           p["conv_w"].astype(_F32)) + p["conv_b"].astype(_F32))
+    xBC_t = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    new_conv = window[:, 1:, :]
+
+    xs = xBC_t[..., :d_inner].reshape(B_, nh, P).astype(_F32)
+    Bm = xBC_t[:, 0, d_inner:d_inner + N].astype(_F32)
+    Cm = xBC_t[:, 0, d_inner + N:].astype(_F32)
+    dt1 = jax.nn.softplus(dt[:, 0, :].astype(_F32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt1 * A[None, :])                      # [B,H]
+
+    ssm = state["ssm"] * decay[:, :, None, None] \
+        + jnp.einsum("bn,bh,bhp->bhnp", Bm, dt1, xs)
+    y = jnp.einsum("bn,bhnp->bhp", Cm, ssm) \
+        + xs * p["D"][None, :, None]
+    y = y.reshape(B_, 1, d_inner)
+    y = rms_norm((y * jax.nn.silu(z.astype(_F32))).astype(x.dtype),
+                 p["norm"], cfg.rms_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                     preferred_element_type=_F32).astype(x.dtype)
+    return out, {"conv": new_conv, "ssm": ssm}

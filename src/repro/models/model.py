@@ -1,0 +1,471 @@
+"""Unified model API over all assigned families.
+
+``init_params`` / ``loss_fn`` / ``prefill`` / ``decode_step`` cover
+dense, MoE, SSM (mamba2), hybrid (zamba2: shared attention block every
+``attn_every`` mamba layers) and enc-dec (seamless) architectures.
+
+Layer parameters are *stacked* (leading L axis) and bodies run under
+``jax.lax.scan`` so compile time and HLO size are depth-independent —
+mandatory for 512-device SPMD compiles of 64–81-layer models.
+
+Cross-entropy is computed in sequence chunks (``lax.scan``) so the
+[B, S, vocab] logits tensor is never materialized (vocab up to 256k).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import (attention_decode, attention_train,
+                                    build_heads, init_attention,
+                                    init_kv_cache)
+from repro.models.config import AttnKind, Family, ModelConfig
+from repro.models.layers import (Param, dense_init, moe_ffn, rms_norm,
+                                 swiglu)
+from repro.distributed.ctx import constrain
+from repro.models.mamba2 import (init_mamba2_layer, init_ssm_state,
+                                 mamba2_decode_step, mamba2_forward)
+
+Array = jax.Array
+_F32 = jnp.float32
+
+__all__ = ["init_params", "loss_fn", "forward_hidden", "prefill",
+           "decode_step", "init_decode_cache", "hybrid_groups"]
+
+
+# ---------------------------------------------------------------- stacking
+def _stack_init(key: Array, n: int, fn):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _init_mlp(key: Array, cfg: ModelConfig, dtype) -> Param:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+        "w_up": dense_init(ks[1], (cfg.d_model, cfg.d_ff), dtype),
+        "w_down": dense_init(ks[2], (cfg.d_ff, cfg.d_model), dtype),
+    }
+
+
+def _init_moe(key: Array, cfg: ModelConfig, ep: int, dtype) -> Param:
+    Ep = cfg.padded_experts(ep)
+    ks = jax.random.split(key, 7)
+    p = {
+        "router": dense_init(ks[0], (cfg.d_model, Ep), dtype),
+        "w_gate": dense_init(ks[1], (Ep, cfg.d_model, cfg.expert_d_ff), dtype),
+        "w_up": dense_init(ks[2], (Ep, cfg.d_model, cfg.expert_d_ff), dtype),
+        "w_down": dense_init(ks[3], (Ep, cfg.expert_d_ff, cfg.d_model), dtype),
+    }
+    if cfg.shared_d_ff:
+        p["shared_gate"] = dense_init(ks[4], (cfg.d_model, cfg.shared_d_ff), dtype)
+        p["shared_up"] = dense_init(ks[5], (cfg.d_model, cfg.shared_d_ff), dtype)
+        p["shared_down"] = dense_init(ks[6], (cfg.shared_d_ff, cfg.d_model), dtype)
+    return p
+
+
+def _init_attn_block(key: Array, cfg: ModelConfig, tp: int, dtype,
+                     cross: bool = False) -> Param:
+    ks = jax.random.split(key, 5)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), _F32),
+        "attn": init_attention(ks[0], cfg, tp, dtype),
+        "ln2": jnp.zeros((cfg.d_model,), _F32),
+    }
+    if cfg.family == Family.MOE:
+        p["mlp"] = _init_moe(ks[1], cfg, tp, dtype)
+    else:
+        p["mlp"] = _init_mlp(ks[1], cfg, dtype)
+    if cross:
+        p["ln_x"] = jnp.zeros((cfg.d_model,), _F32)
+        p["cross"] = init_attention(ks[2], cfg, tp, dtype)
+    return p
+
+
+def _init_ssm_block(key: Array, cfg: ModelConfig, dtype) -> Param:
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": jnp.zeros((cfg.d_model,), _F32),
+        "mixer": init_mamba2_layer(ks[0], cfg, dtype),
+    }
+
+
+def hybrid_groups(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, group_size, remainder) for the zamba2 layout:
+    [group_size mamba layers + shared attn block] × n_groups + remainder."""
+    g = cfg.attn_every
+    n_groups = cfg.n_layers // g
+    rem = cfg.n_layers - n_groups * g
+    return n_groups, g, rem
+
+
+def init_params(cfg: ModelConfig, key: Array, tp: int = 1,
+                dtype=None) -> Param:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    Vp = cfg.padded_vocab()
+    ks = jax.random.split(key, 8)
+    params: Param = {
+        "embed": dense_init(ks[0], (Vp, cfg.d_model), dtype, scale=0.02),
+        "final_norm": jnp.zeros((cfg.d_model,), _F32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], (cfg.d_model, Vp), dtype)
+
+    if cfg.family in (Family.DENSE, Family.MOE):
+        params["layers"] = _stack_init(
+            ks[2], cfg.n_layers,
+            lambda k: _init_attn_block(k, cfg, tp, dtype))
+    elif cfg.family == Family.SSM:
+        params["layers"] = _stack_init(
+            ks[2], cfg.n_layers, lambda k: _init_ssm_block(k, cfg, dtype))
+    elif cfg.family == Family.HYBRID:
+        params["layers"] = _stack_init(
+            ks[2], cfg.n_layers, lambda k: _init_ssm_block(k, cfg, dtype))
+        params["shared_attn"] = _init_attn_block(ks[3], cfg, tp, dtype)
+    elif cfg.family == Family.ENCDEC:
+        params["enc_layers"] = _stack_init(
+            ks[2], cfg.n_enc_layers,
+            lambda k: _init_attn_block(k, cfg, tp, dtype))
+        params["layers"] = _stack_init(
+            ks[4], cfg.n_layers,
+            lambda k: _init_attn_block(k, cfg, tp, dtype, cross=True))
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), _F32)
+    return params
+
+
+# ----------------------------------------------------------------- blocks
+def _attn_mlp_block(p: Param, h: Array, cfg: ModelConfig, tp: int, *,
+                    causal: bool | None = None,
+                    enc_out: Array | None = None) -> Array:
+    x = constrain(rms_norm(h, p["ln1"], cfg.rms_eps), "gathered")
+    h = h + attention_train(p["attn"], x, cfg, tp, causal=causal)
+    if enc_out is not None:
+        from repro.models.attention import attention_cross
+        h = h + attention_cross(
+            p["cross"],
+            constrain(rms_norm(h, p["ln_x"], cfg.rms_eps), "gathered"),
+            enc_out, cfg, tp)
+    hn = constrain(rms_norm(h, p["ln2"], cfg.rms_eps), "gathered")
+    hn = constrain(hn, "dec_mlp")      # no-op unless decode rules installed
+    if cfg.family == Family.MOE:
+        h = h + moe_ffn(hn, p["mlp"], cfg, ep=tp)
+    else:
+        h = h + swiglu(hn, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                       p["mlp"]["w_down"])
+    return h
+
+
+def _ssm_block(p: Param, h: Array, cfg: ModelConfig) -> Array:
+    return h + mamba2_forward(p["mixer"], rms_norm(h, p["ln1"], cfg.rms_eps),
+                              cfg)
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn, policy=None)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return fn
+
+
+# ------------------------------------------------------------ train forward
+def forward_hidden(params: Param, cfg: ModelConfig, tokens: Array,
+                   tp: int = 1, *, embeds: Array | None = None,
+                   enc_embeds: Array | None = None) -> Array:
+    """Token ids (or stub embeddings) -> final hidden states [B, S, d]."""
+    if embeds is None:
+        h = params["embed"][tokens]
+    else:
+        h = embeds
+    h = constrain(h, "act")
+
+    if cfg.family in (Family.DENSE, Family.MOE):
+        def body(carry, p_l):
+            c = constrain(carry, "act")
+            return constrain(_maybe_remat(
+                lambda cc: _attn_mlp_block(p_l, cc, cfg, tp),
+                cfg)(c), "act"), None
+        h, _ = jax.lax.scan(body, h, params["layers"])
+
+    elif cfg.family == Family.SSM:
+        def body(carry, p_l):
+            c = constrain(carry, "act")
+            return constrain(_maybe_remat(
+                lambda cc: _ssm_block(p_l, cc, cfg), cfg)(c), "act"), None
+        h, _ = jax.lax.scan(body, h, params["layers"])
+
+    elif cfg.family == Family.HYBRID:
+        n_groups, g, rem = hybrid_groups(cfg)
+        grouped = jax.tree.map(
+            lambda x: x[:n_groups * g].reshape(n_groups, g, *x.shape[1:]),
+            params["layers"])
+        tail = jax.tree.map(lambda x: x[n_groups * g:], params["layers"])
+        shared = params["shared_attn"]
+
+        def group_body(carry, p_g):
+            def inner(c, p_l):
+                blk = _maybe_remat(
+                    lambda cc: _ssm_block(p_l, cc, cfg), cfg)
+                return constrain(blk(constrain(c, "act")), "act"), None
+            c, _ = jax.lax.scan(inner, carry, p_g)
+            c = _maybe_remat(
+                lambda cc: _attn_mlp_block(shared, cc, cfg, tp), cfg)(c)
+            return constrain(c, "act"), None
+        h, _ = jax.lax.scan(group_body, h, grouped)
+        if rem:
+            def tail_body(carry, p_l):
+                return _ssm_block(p_l, carry, cfg), None
+            h, _ = jax.lax.scan(tail_body, h, tail)
+
+    elif cfg.family == Family.ENCDEC:
+        assert enc_embeds is not None, "enc-dec needs encoder stub embeddings"
+        e = enc_embeds
+
+        def enc_body(carry, p_l):
+            c = constrain(carry, "act")
+            return constrain(_maybe_remat(
+                lambda cc: _attn_mlp_block(p_l, cc, cfg, tp, causal=False),
+                cfg)(c), "act"), None
+        e, _ = jax.lax.scan(enc_body, e, params["enc_layers"])
+        enc_out = rms_norm(e, params["enc_norm"], cfg.rms_eps)
+
+        def dec_body(carry, p_l):
+            c = constrain(carry, "act")
+            return constrain(_maybe_remat(
+                lambda cc: _attn_mlp_block(p_l, cc, cfg, tp, causal=True,
+                                           enc_out=enc_out), cfg)(c),
+                "act"), None
+        h, _ = jax.lax.scan(dec_body, h, params["layers"])
+
+    return rms_norm(h, params["final_norm"], cfg.rms_eps)
+
+
+def _lm_head(params: Param, cfg: ModelConfig) -> Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_cross_entropy(h: Array, lm_head: Array, labels: Array,
+                          vocab_real: int, chunk: int = 512) -> Array:
+    """Mean CE without materializing [B, S, V]: scan over S chunks.
+
+    labels < 0 are masked.  Padded-vocab logits are masked to -inf.
+    """
+    B, S, d = h.shape
+    Vp = lm_head.shape[-1]
+    chunk = min(chunk, S)
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h.reshape(B, n, chunk, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(B, n, chunk).transpose(1, 0, 2)
+    vocab_mask = (jnp.arange(Vp) >= vocab_real)
+
+    # rematerialized: per-chunk [B,chunk,V] logits are recomputed in the
+    # backward pass instead of being stored for all chunks.
+    @jax.checkpoint
+    def body(carry, inp):
+        h_c, y_c = inp
+        logits = jnp.einsum("bsd,dv->bsv", h_c, lm_head,
+                            preferred_element_type=_F32)
+        logits = jnp.where(vocab_mask[None, None, :], -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(y_c, 0)[..., None], axis=-1)[..., 0]
+        mask = (y_c >= 0).astype(_F32)
+        ce = (lse - gold) * mask
+        n_tok, s_ce = carry
+        return (n_tok + mask.sum(), s_ce + ce.sum()), None
+
+    (n_tok, s_ce), _ = jax.lax.scan(body, (jnp.zeros((), _F32),
+                                           jnp.zeros((), _F32)), (hc, yc))
+    return s_ce / jnp.maximum(n_tok, 1.0)
+
+
+def loss_fn(params: Param, cfg: ModelConfig, batch: dict,
+            tp: int = 1) -> Array:
+    """batch: {"tokens": [B,S] int32, "labels": [B,S] int32 (-1 pad),
+    optional "enc_embeds": [B,Senc,d]}."""
+    h = forward_hidden(params, cfg, batch["tokens"], tp,
+                       enc_embeds=batch.get("enc_embeds"))
+    return chunked_cross_entropy(h, _lm_head(params, cfg), batch["labels"],
+                                 cfg.vocab_size)
+
+
+# -------------------------------------------------------------------- decode
+def _stacked_ssm_state(cfg: ModelConfig, n_layers: int, batch: int) -> dict:
+    one = init_ssm_state(cfg, batch)
+    return jax.tree.map(
+        lambda x: jnp.zeros((n_layers, *x.shape), x.dtype), one)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      tp: int = 1, dtype=None, enc_len: int = 0) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cache: dict = {"len": jnp.zeros((batch,), jnp.int32)}
+    if cfg.family in (Family.DENSE, Family.MOE):
+        cache["kv"] = init_kv_cache(cfg, cfg.n_layers, batch, max_len, tp,
+                                    dtype)
+    elif cfg.family == Family.SSM:
+        cache["ssm"] = _stacked_ssm_state(cfg, cfg.n_layers, batch)
+    elif cfg.family == Family.HYBRID:
+        n_groups, _, _ = hybrid_groups(cfg)
+        cache["ssm"] = _stacked_ssm_state(cfg, cfg.n_layers, batch)
+        cache["kv"] = init_kv_cache(cfg, n_groups, batch, max_len, tp, dtype)
+    elif cfg.family == Family.ENCDEC:
+        cache["kv"] = init_kv_cache(cfg, cfg.n_layers, batch, max_len, tp,
+                                    dtype)
+        hq, hkv = build_heads(cfg, tp)
+        cache["cross_k"] = jnp.zeros(
+            (cfg.n_layers, batch, enc_len, hkv, cfg.head_dim), dtype)
+        cache["cross_v"] = jnp.zeros(
+            (cfg.n_layers, batch, enc_len, hkv, cfg.head_dim), dtype)
+        cache["enc_len"] = jnp.full((batch,), enc_len, jnp.int32)
+    return cache
+
+
+def _decode_attn_layer(p_l: Param, h: Array, cfg: ModelConfig, tp: int,
+                       kv_l: dict, cache_len: Array,
+                       cross: tuple | None = None, commit: bool = True):
+    a, kv_new = attention_decode(p_l["attn"],
+                                 rms_norm(h, p_l["ln1"], cfg.rms_eps),
+                                 cfg, tp, kv_l, cache_len,
+                                 update_cache=commit)
+    h = h + a
+    if cross is not None:
+        from repro.models.attention import cross_attention_decode
+        ck, cv, enc_len = cross
+        h = h + cross_attention_decode(
+            p_l["cross"], rms_norm(h, p_l["ln_x"], cfg.rms_eps), cfg, tp,
+            ck, cv, enc_len)
+    hn = rms_norm(h, p_l["ln2"], cfg.rms_eps)
+    hn = constrain(hn, "dec_mlp")      # weight-stationary decode MLP (D2)
+    if cfg.family == Family.MOE:
+        h = h + moe_ffn(hn, p_l["mlp"], cfg, ep=tp)
+    else:
+        h = h + swiglu(hn, p_l["mlp"]["w_gate"], p_l["mlp"]["w_up"],
+                       p_l["mlp"]["w_down"])
+    return h, kv_new
+
+
+def decode_step(params: Param, cfg: ModelConfig, tokens: Array,
+                cache: dict, tp: int = 1,
+                commit: bool = True) -> tuple[Array, dict]:
+    """One greedy decode step.  tokens: [B] int32 -> (next_logits, cache).
+
+    ``commit=False`` (production serve_step): attention caches stay frozen
+    (split-KV reads, no in-graph dynamic updates); the returned cache dict
+    carries 1-token KV *deltas* [L,B,1,H,D] for the serving loop's separate
+    batched commit, and ``len`` is advanced by the committer.  SSM states
+    (O(1), elementwise) are always updated in-graph.
+    """
+    B = tokens.shape[0]
+    h = params["embed"][tokens][:, None, :]          # [B,1,d]
+    cache_len = cache["len"]
+    new_cache = dict(cache)
+
+    if cfg.family in (Family.DENSE, Family.MOE, Family.ENCDEC):
+        kv = cache["kv"]
+        cross = None
+
+        def body(carry, xs):
+            hh = carry
+            if cfg.family == Family.ENCDEC:
+                p_l, kv_l, ck, cv = xs
+                hh, kv_new = _decode_attn_layer(
+                    p_l, hh, cfg, tp, kv_l, cache_len,
+                    cross=(ck, cv, cache["enc_len"]), commit=commit)
+            else:
+                p_l, kv_l = xs
+                hh, kv_new = _decode_attn_layer(p_l, hh, cfg, tp, kv_l,
+                                                cache_len, commit=commit)
+            return hh, kv_new
+
+        if cfg.family == Family.ENCDEC:
+            xs = (params["layers"], kv, cache["cross_k"], cache["cross_v"])
+        else:
+            xs = (params["layers"], kv)
+        h, kv_updated = jax.lax.scan(body, h, xs)
+        new_cache["kv"] = kv_updated
+
+    elif cfg.family == Family.SSM:
+        def body(carry, xs):
+            p_l, s_l = xs
+            x, s_new = mamba2_decode_step(
+                p_l["mixer"], rms_norm(carry, p_l["ln1"], cfg.rms_eps), s_l,
+                cfg)
+            return carry + x, s_new
+        h, ssm_updated = jax.lax.scan(body, h, (params["layers"],
+                                                cache["ssm"]))
+        new_cache["ssm"] = ssm_updated
+
+    elif cfg.family == Family.HYBRID:
+        n_groups, g, rem = hybrid_groups(cfg)
+        layers = params["layers"]
+        grouped = jax.tree.map(
+            lambda x: x[:n_groups * g].reshape(n_groups, g, *x.shape[1:]),
+            layers)
+        tail = jax.tree.map(lambda x: x[n_groups * g:], layers)
+        ssm = cache["ssm"]
+        ssm_g = jax.tree.map(
+            lambda x: x[:n_groups * g].reshape(n_groups, g, *x.shape[1:]), ssm)
+        ssm_t = jax.tree.map(lambda x: x[n_groups * g:], ssm)
+        shared = params["shared_attn"]
+
+        def group_body(carry, xs):
+            p_g, s_g, kv_l = xs
+
+            def inner(c, xs2):
+                p_l, s_l = xs2
+                x, s_new = mamba2_decode_step(
+                    p_l["mixer"], rms_norm(c, p_l["ln1"], cfg.rms_eps), s_l,
+                    cfg)
+                return c + x, s_new
+            c, s_new = jax.lax.scan(inner, carry, (p_g, s_g))
+            c, kv_new = _decode_attn_layer(shared, c, cfg, tp, kv_l,
+                                           cache_len, commit=commit)
+            return c, (s_new, kv_new)
+
+        h, (ssm_g_new, kv_new) = jax.lax.scan(
+            group_body, h, (grouped, ssm_g, cache["kv"]))
+        if rem:
+            def tail_body(c, xs2):
+                p_l, s_l = xs2
+                x, s_new = mamba2_decode_step(
+                    p_l["mixer"], rms_norm(c, p_l["ln1"], cfg.rms_eps), s_l,
+                    cfg)
+                return c + x, s_new
+            h, ssm_t_new = jax.lax.scan(tail_body, h, (tail, ssm_t))
+        else:
+            ssm_t_new = ssm_t
+        new_cache["ssm"] = jax.tree.map(
+            lambda a, b: jnp.concatenate(
+                [a.reshape(n_groups * g, *a.shape[2:]), b], axis=0),
+            ssm_g_new, ssm_t_new)
+        new_cache["kv"] = kv_new
+
+    h = rms_norm(h, params["final_norm"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", h, _lm_head(params, cfg),
+                        preferred_element_type=_F32)[:, 0, :]
+    vocab_mask = jnp.arange(logits.shape[-1]) >= cfg.vocab_size
+    logits = jnp.where(vocab_mask[None, :], -1e30, logits)
+    if commit:
+        new_cache["len"] = cache_len + 1
+    return logits, new_cache
+
+
+# ------------------------------------------------------------------- prefill
+def prefill(params: Param, cfg: ModelConfig, tokens: Array, tp: int = 1,
+            *, enc_embeds: Array | None = None) -> Array:
+    """Prefill forward returning last-position logits (the serving engine's
+    paged cache is filled separately; see repro.serve)."""
+    h = forward_hidden(params, cfg, tokens, tp, enc_embeds=enc_embeds)
+    logits = jnp.einsum("bd,dv->bv", h[:, -1, :], _lm_head(params, cfg),
+                        preferred_element_type=_F32)
+    return logits

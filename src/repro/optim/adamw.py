@@ -1,0 +1,101 @@
+"""AdamW with fp32 master weights + schedules (self-contained, no optax).
+
+Params train in bf16 (MXU-native); the optimizer keeps fp32 master copies
+and moments.  Update math follows Loshchilov & Hutter (decoupled weight
+decay) with global-norm clipping.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update",
+           "cosine_schedule", "linear_schedule"]
+
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"      # cosine | linear | constant
+
+
+def cosine_schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    return cfg.lr_peak * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def linear_schedule(step, cfg: AdamWConfig):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    return cfg.lr_peak * warm * (1.0 - prog)
+
+
+def _lr(step, cfg: AdamWConfig):
+    if cfg.schedule == "cosine":
+        return cosine_schedule(step, cfg)
+    if cfg.schedule == "linear":
+        return linear_schedule(step, cfg)
+    return jnp.asarray(cfg.lr_peak)
+
+
+def init_opt_state(params) -> dict:
+    f32 = lambda t: jax.tree.map(lambda x: x.astype(_F32), t)
+    zeros = lambda t: jax.tree.map(lambda x: jnp.zeros(x.shape, _F32), t)
+    return {"master": f32(params), "mu": zeros(params), "nu": zeros(params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, opt_state, cfg: AdamWConfig, params=None):
+    """Returns (new_params, new_opt_state, grad_norm).
+
+    ``params`` (old tree) supplies per-leaf dtypes so low-precision leaves
+    stay low-precision and fp32 leaves (norm scales) stay fp32 across steps.
+    """
+    count = opt_state["count"] + 1
+    g32 = jax.tree.map(lambda g: g.astype(_F32), grads)
+
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                         for g in jax.tree.leaves(g32)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    lr = _lr(count.astype(_F32), cfg)
+    b1c = 1.0 - cfg.b1 ** count.astype(_F32)
+    b2c = 1.0 - cfg.b2 ** count.astype(_F32)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g,
+                      opt_state["mu"], g32)
+    nu = jax.tree.map(lambda n, g: cfg.b2 * n + (1 - cfg.b2) * g * g,
+                      opt_state["nu"], g32)
+
+    def upd(p, m, n):
+        mh, nh = m / b1c, n / b2c
+        return p - lr * (mh / (jnp.sqrt(nh) + cfg.eps)
+                         + cfg.weight_decay * p)
+
+    master = jax.tree.map(upd, opt_state["master"], mu, nu)
+    if params is not None:
+        new_params = jax.tree.map(lambda x, p: x.astype(p.dtype),
+                                  master, params)
+    else:
+        new_params = jax.tree.map(lambda x: x.astype(jnp.bfloat16), master)
+    return new_params, {"master": master, "mu": mu, "nu": nu,
+                        "count": count}, gnorm

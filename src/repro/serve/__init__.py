@@ -1,0 +1,1 @@
+"""Multi-tenant serving: continuous batching over the ECI-managed pool."""

@@ -1,0 +1,1 @@
+"""Training steps, trainer loop, fault tolerance."""

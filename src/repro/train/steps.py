@@ -1,0 +1,81 @@
+"""Train-step factory: loss → grads (±microbatch accumulation) → AdamW.
+
+Distribution is carried entirely by pjit in/out shardings
+(``repro.distributed.sharding``); the step body is mesh-agnostic.  With a
+data-sharded batch, averaging the loss over the global batch makes GSPMD
+emit the DP gradient all-reduce automatically; FSDP param gathers come from
+the param shardings.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import loss_fn
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+
+__all__ = ["make_train_step", "init_train_state"]
+
+
+def init_train_state(params) -> dict:
+    return {"params": params, "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, tp: int = 1,
+                    microbatches: int = 1, grad_shardings=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_shardings``: optional param-tree of NamedShardings; constrains
+    each gradient leaf to its FSDP shard right where backward produces it,
+    so GSPMD emits reduce-scatter instead of full-size all-reduce
+    (§Perf iteration T7)."""
+
+    def compute_loss(params, batch):
+        return loss_fn(params, cfg, batch, tp)
+
+    def _constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def grads_of(params, batch):
+        if microbatches <= 1:
+            l, g = jax.value_and_grad(compute_loss)(params, batch)
+            return l, _constrain_grads(g)
+
+        def mb_slice(b, i):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // microbatches),
+                    x.shape[0] // microbatches, axis=0), b)
+
+        def body(carry, i):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(compute_loss)(params, mb_slice(batch, i))
+            g = _constrain_grads(g)
+            acc_g = jax.tree.map(jnp.add, acc_g, g)
+            return (acc_loss + l, acc_g), None
+
+        zeros = _constrain_grads(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        (tot_l, tot_g), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros),
+            jnp.arange(microbatches))
+        inv = 1.0 / microbatches
+        return tot_l * inv, jax.tree.map(lambda g: g * inv, tot_g)
+
+    def train_step(state, batch):
+        loss, grads = grads_of(state["params"], batch)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, state["opt"], opt_cfg, params=state["params"])
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr_step": new_opt["count"]}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step

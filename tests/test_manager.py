@@ -1,0 +1,100 @@
+"""ECICacheManager (Monitor/Analyzer/Actuator) + baselines end-to-end."""
+import numpy as np
+import pytest
+
+from repro.core import (ECICacheManager, GlobalLRUManager, Trace,
+                        WritePolicy, make_manager)
+from repro.data.traces import MSR_PROFILES, msr_trace
+
+
+NAMES = ["wdev_0", "hm_1", "prn_1", "web_0"]
+
+
+def _run(scheme, capacity, windows=3, n=1500, **kw):
+    mgr = make_manager(scheme, capacity, NAMES, c_min=20,
+                       initial_blocks=50, **kw)
+    for w in range(windows):
+        traces = [msr_trace(nm, n, seed=97 * w + i)
+                  for i, nm in enumerate(NAMES)]
+        mgr.run_window(traces)
+    return mgr
+
+
+def test_feasible_allocates_urd_sizes():
+    mgr = _run("eci", capacity=10**6)
+    d = mgr.history[-1]
+    assert d.feasible
+    for t, s in zip(mgr.tenants, d.sizes):
+        assert s == t.h_fn.max_useful_size
+
+
+def test_infeasible_respects_capacity():
+    mgr = _run("eci", capacity=300)
+    for d in mgr.history:
+        if not d.feasible:
+            assert int(d.sizes.sum()) <= 300
+
+
+def test_policy_assignment_matches_alg3():
+    mgr = _run("eci", capacity=10**5)
+    for t in mgr.tenants:
+        # wdev-like WAW-heavy tenants end RO; hm_1 (pure reads) stays WB
+        if t.name == "hm_1":
+            assert t.policy is WritePolicy.WB
+        if t.name == "wdev_0":
+            assert t.policy is WritePolicy.RO
+
+
+def test_centaur_never_adapts_policy():
+    mgr = _run("centaur", capacity=10**5)
+    assert all(t.policy is WritePolicy.WB for t in mgr.tenants)
+
+
+def test_eci_writes_fewer_blocks_than_centaur():
+    """Headline endurance direction (paper: -65%)."""
+    eci = _run("eci", capacity=2000)
+    cen = _run("centaur", capacity=2000)
+    assert eci.summary()["cache_writes"] < cen.summary()["cache_writes"]
+
+
+def test_eci_allocates_no_more_than_centaur_feasible():
+    """Feasible state (App. A): URD sizes <= TRD sizes."""
+    eci = _run("eci", capacity=10**6)
+    cen = _run("centaur", capacity=10**6)
+    assert (eci.summary()["allocated_blocks"]
+            <= cen.summary()["allocated_blocks"])
+
+
+def test_retire_tenant_releases_space():
+    mgr = make_manager("eci", 1000, NAMES, c_min=10, initial_blocks=50)
+    traces = [msr_trace(nm, 500, seed=i) for i, nm in enumerate(NAMES)]
+    mgr.run_window(traces)
+    mgr.run_window([traces[0], None, traces[2], traces[3]])
+    assert mgr.tenants[1].cache.capacity == 0
+    assert not mgr.tenants[1].active
+    assert mgr.allocated_sizes()[1] == 0
+
+
+def test_global_lru_baseline_runs():
+    g = GlobalLRUManager(500, NAMES)
+    traces = [msr_trace(nm, 500, seed=i) for i, nm in enumerate(NAMES)]
+    g.run_window(traces)
+    s = g.summary()
+    assert s["accesses"] == 2000
+    assert 0 <= s["read_hit_ratio"] <= 1
+
+
+def test_static_and_reuse_intensity_schemes():
+    for scheme in ("static", "reuse_intensity"):
+        mgr = _run(scheme, capacity=800)
+        s = mgr.summary()
+        assert s["accesses"] > 0
+        assert s["allocated_blocks"] <= 800 + len(NAMES)  # rounding slack
+
+
+def test_sampled_monitor_mode():
+    mgr = make_manager("eci", 5000, NAMES, c_min=10, initial_blocks=50,
+                       sample_rate=0.5)
+    traces = [msr_trace(nm, 800, seed=i) for i, nm in enumerate(NAMES)]
+    mgr.run_window(traces)
+    assert mgr.history[-1].sizes.sum() > 0

@@ -1,0 +1,86 @@
+"""End-to-end behaviour: the paper's headline claims, directionally pinned.
+
+The quantitative reproduction (17% perf / 30% perf-per-cost / 65% writes)
+lives in ``benchmarks/``; these tests assert the *directions* hold on small
+instances so regressions are caught in seconds.
+"""
+import numpy as np
+import pytest
+
+from repro.core import make_manager
+from repro.data.traces import (FILEBENCH_PROFILES, MSR_PROFILES,
+                               filebench_trace, generate_trace, msr_trace)
+from repro.core.trace import request_type_mix
+
+NAMES = list(MSR_PROFILES)
+
+
+def _run(scheme, capacity, windows=3, n=2000, seed=0, **kw):
+    mgr = make_manager(scheme, capacity, NAMES, c_min=50, initial_blocks=100,
+                       t_fast=1.0, t_slow=20.0, flush_cost=10.0, **kw)
+    for w in range(windows):
+        traces = [msr_trace(nm, n, seed=seed + 1000 * w + i)
+                  for i, nm in enumerate(NAMES)]
+        mgr.run_window(traces)
+    return mgr
+
+
+@pytest.fixture(scope="module")
+def pair():
+    eci = _run("eci", capacity=4000)
+    cen = _run("centaur", capacity=4000)
+    return eci.summary(), cen.summary()
+
+
+def test_eci_reduces_cache_writes_substantially(pair):
+    es, cs = pair
+    saved = 1 - es["cache_writes"] / cs["cache_writes"]
+    assert saved > 0.35, f"writes saved only {saved:.1%}"
+
+
+def test_eci_improves_perf_per_cost(pair):
+    es, cs = pair
+    assert es["perf_per_cost"] > cs["perf_per_cost"]
+
+
+def test_eci_not_slower_than_centaur_under_pressure(pair):
+    es, cs = pair
+    assert es["mean_latency"] <= cs["mean_latency"] * 1.10
+
+
+def test_feasible_state_smaller_allocation_same_schemes():
+    """App. A: with unlimited capacity ECI allocates much less."""
+    eci = _run("eci", capacity=10**7, windows=2)
+    cen = _run("centaur", capacity=10**7, windows=2)
+    ratio = (eci.summary()["allocated_blocks"]
+             / cen.summary()["allocated_blocks"])
+    assert ratio < 0.75, ratio
+
+
+def test_generator_matches_requested_mix():
+    for name in ("wdev_0", "hm_1", "prn_1"):
+        prof = MSR_PROFILES[name].normalized()
+        t = msr_trace(name, 6000, seed=9)
+        mix = request_type_mix(t)
+        # cold classes migrate into re-touch classes when pools are warm;
+        # check the read/write split instead (tight) + WAW ballpark
+        want_reads = prof.cold_read + prof.rar + prof.raw
+        got_reads = mix["CR"] + mix["RAR"] + mix["RAW"]
+        assert abs(got_reads - want_reads) < 0.08, name
+        assert abs(mix["WAW"] - prof.waw) < 0.12, name
+
+
+def test_filebench_profiles_cover_fig4_workloads():
+    for name in ("fileserver", "webserver", "copyfiles",
+                 "singlestreamread"):
+        t = filebench_trace(name, 1000)
+        assert len(t) == 1000
+
+
+def test_sixteen_tenants_capacity_invariant():
+    mgr = _run("eci", capacity=3000, windows=2)
+    for d in mgr.history:
+        assert int(d.sizes.sum()) <= max(
+            3000, sum(t.urd_size for t in mgr.tenants))
+        if not d.feasible:
+            assert int(d.sizes.sum()) <= 3000

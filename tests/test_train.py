@@ -1,0 +1,165 @@
+"""Trainer, optimizer, checkpointing, data pipeline."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (latest_step, restore_checkpoint,
+                                         save_checkpoint)
+from repro.configs import get_smoke_config
+from repro.data.lm import PrefetchIterator, SyntheticLM
+from repro.models import model as M
+from repro.optim.adamw import AdamWConfig, adamw_update, init_opt_state
+from repro.train.steps import init_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(microbatches=1):
+    cfg = get_smoke_config("qwen3_0_6b")
+    params = M.init_params(cfg, KEY)
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=5, total_steps=50)
+    step = jax.jit(make_train_step(cfg, opt_cfg, microbatches=microbatches))
+    return cfg, init_train_state(params), step
+
+
+def test_loss_decreases():
+    cfg, state, step = _setup()
+    data = SyntheticLM(cfg.vocab_size, 32, 8, seed=0)
+    losses = []
+    for i in range(15):
+        state, m = step(state, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+
+
+def test_microbatch_equivalence():
+    """Grad accumulation over 4 microbatches == single full batch."""
+    cfg, state, step1 = _setup(microbatches=1)
+    _, state4, step4 = _setup(microbatches=4)
+    data = SyntheticLM(cfg.vocab_size, 32, 8, seed=0)
+    b = data.batch_at(0)
+    s1, m1 = step1(state, b)
+    s4, m4 = step4(state4, b)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-3)
+    p1 = jax.tree.leaves(s1["params"])
+    p4 = jax.tree.leaves(s4["params"])
+    for a, b_ in zip(p1, p4):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b_, np.float32),
+                                   rtol=5e-2, atol=5e-3)
+
+
+def test_adamw_dtype_stability():
+    cfg, state, step = _setup()
+    data = SyntheticLM(cfg.vocab_size, 16, 4, seed=1)
+    dtypes0 = jax.tree.map(lambda x: x.dtype, state["params"])
+    state, _ = step(state, data.batch_at(0))
+    dtypes1 = jax.tree.map(lambda x: x.dtype, state["params"])
+    assert jax.tree.all(jax.tree.map(lambda a, b: a == b, dtypes0, dtypes1))
+
+
+def test_gradient_clipping():
+    p = {"w": jnp.ones((4, 4))}
+    opt = init_opt_state(p)
+    g = {"w": jnp.full((4, 4), 1e6)}
+    cfg = AdamWConfig(clip_norm=1.0)
+    _, opt2, gnorm = adamw_update(g, opt, cfg, params=p)
+    assert float(gnorm) > 1e6 - 1
+    assert float(jnp.abs(opt2["mu"]["w"]).max()) < 1.0  # clipped
+
+
+def test_checkpoint_roundtrip_and_restart_determinism():
+    cfg, state, step = _setup()
+    data = SyntheticLM(cfg.vocab_size, 32, 8, seed=2)
+    with tempfile.TemporaryDirectory() as d:
+        for i in range(5):
+            state, _ = step(state, data.batch_at(i))
+        save_checkpoint(d, state, 5)
+        ref_state = state
+        for i in range(5, 8):
+            ref_state, ref_m = step(ref_state, data.batch_at(i))
+        # restart from the checkpoint: identical continuation
+        restored, s = restore_checkpoint(d, state)
+        assert s == 5
+        for i in range(5, 8):
+            restored, m = step(restored, data.batch_at(i))
+        assert float(m["loss"]) == pytest.approx(float(ref_m["loss"]),
+                                                 rel=1e-5)
+
+
+def test_trainer_failure_injection_and_recovery():
+    cfg, state, step = _setup()
+    data = SyntheticLM(cfg.vocab_size, 32, 8, seed=3)
+    fails = {"n": 0}
+
+    def hook(step_i):
+        if step_i == 7 and fails["n"] == 0:
+            fails["n"] += 1
+            raise RuntimeError("injected")
+
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(total_steps=12, ckpt_every=3, ckpt_dir=d)
+        tr = Trainer(step, state, data, tc, failure_hook=hook)
+        out = tr.run()
+    assert out["restarts"] == 1
+    assert out["final_step"] == 12
+
+
+def test_trainer_straggler_detection():
+    import time
+    cfg, state, step = _setup()
+    data = SyntheticLM(cfg.vocab_size, 16, 4, seed=4)
+    slow = {"hits": 0}
+
+    def slow_hook(step_i):
+        if step_i == 9:
+            time.sleep(4.0)         # >> straggler_factor × median step time
+
+    def mitigation(step_i, factor):
+        slow["hits"] += 1
+
+    with tempfile.TemporaryDirectory() as d:
+        tc = TrainerConfig(total_steps=11, ckpt_every=100, ckpt_dir=d,
+                           straggler_factor=2.0)
+        tr = Trainer(step, state, data, tc, failure_hook=slow_hook,
+                     straggler_hook=mitigation)
+        tr.run()
+    assert slow["hits"] >= 1
+
+
+def test_data_pipeline_deterministic_and_prefetch():
+    src = SyntheticLM(1000, 16, 4, seed=5)
+    a, b = src.batch_at(3), src.batch_at(3)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    it = PrefetchIterator(src, start_step=0, prefetch=2)
+    first = next(it)
+    np.testing.assert_array_equal(first["tokens"], src.batch_at(0)["tokens"])
+    it.close()
+
+
+def test_compression_error_feedback():
+    from repro.optim.compression import (dequantize_int8, init_error_state,
+                                         quantize_int8)
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.standard_normal((64, 64)), jnp.float32)
+    q, s = quantize_int8(g)
+    deq = dequantize_int8(q, s)
+    rel = float(jnp.abs(deq - g).max() / jnp.abs(g).max())
+    assert rel < 0.02                           # <= one int8 step
+    # error feedback: accumulated residual corrects the quantization bias
+    err = jnp.zeros_like(g)
+    total_true, total_sent = jnp.zeros_like(g), jnp.zeros_like(g)
+    for _ in range(50):
+        g32 = g + err
+        q, s = quantize_int8(g32)
+        deq = dequantize_int8(q, s)
+        err = g32 - deq
+        total_true += g
+        total_sent += deq
+    drift = float(jnp.abs(total_sent - total_true).max())
+    assert drift < 0.05                          # residual stays bounded

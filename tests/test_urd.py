@@ -1,0 +1,145 @@
+"""Reuse-distance engines: paper examples, cross-engine equality, properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AccessClass, Trace, classify_accesses, max_rd,
+                        request_type_mix, reuse_distances,
+                        reuse_distances_vectorized, sampled_reuse_distances,
+                        total_cache_writes_wb, urd_cache_blocks, write_ratio)
+from repro.core.write_policy import WritePolicy, assign_write_policy
+
+
+def brute_force_rd(addrs, is_read, kind):
+    """O(n²) straight-from-definition oracle."""
+    out = np.full(len(addrs), -1, dtype=np.int64)
+    for i in range(len(addrs)):
+        prev = -1
+        for j in range(i - 1, -1, -1):
+            if addrs[j] == addrs[i]:
+                prev = j
+                break
+        if prev < 0:
+            continue
+        if kind == "urd" and not is_read[i]:
+            continue
+        out[i] = len(set(addrs[prev + 1:i]))
+    return out
+
+
+def trace_strategy(max_n=60, max_addr=12):
+    return st.lists(
+        st.tuples(st.integers(0, max_addr), st.booleans()),
+        min_size=0, max_size=max_n)
+
+
+def _mk(trace_list):
+    addrs = np.array([a for a, _ in trace_list], dtype=np.int64)
+    reads = np.array([r for _, r in trace_list], dtype=bool)
+    return Trace(addrs, reads)
+
+
+class TestPaperFig5:
+    """The worked example of §4: TRD=4 (5 blocks), URD=1 (2 blocks)."""
+
+    def setup_method(self):
+        addrs = np.array([1, 2, 1, 3, 4, 5, 2], dtype=np.int64)
+        reads = np.array([False, True, True, True, True, True, False])
+        self.trace = Trace(addrs, reads, "fig5")
+
+    def test_trd(self):
+        assert max_rd(reuse_distances(self.trace, "trd")) == 4
+        assert urd_cache_blocks(reuse_distances(self.trace, "trd")) == 5
+
+    def test_urd(self):
+        assert max_rd(reuse_distances(self.trace, "urd")) == 1
+        assert urd_cache_blocks(reuse_distances(self.trace, "urd")) == 2
+
+    def test_classification(self):
+        codes = classify_accesses(self.trace)
+        # Req1 CW, Req2 CR, Req3 RAW, Req4-6 CR, Req7 WAR
+        assert codes[0] == AccessClass.CW
+        assert codes[2] == AccessClass.RAW
+        assert codes[6] == AccessClass.WAR
+
+
+@settings(max_examples=200, deadline=None)
+@given(trace_strategy())
+def test_engines_agree_with_brute_force(trace_list):
+    t = _mk(trace_list)
+    for kind in ("trd", "urd"):
+        bf = brute_force_rd(t.addrs, t.is_read, kind)
+        fen = reuse_distances(t, kind).distances
+        vec = reuse_distances_vectorized(t, kind, tile=16).distances
+        assert np.array_equal(bf, fen), kind
+        assert np.array_equal(bf, vec), kind
+
+
+@settings(max_examples=200, deadline=None)
+@given(trace_strategy())
+def test_urd_subset_of_trd(trace_list):
+    """Paper Eq. 1: URD samples ⊆ TRD samples -> max/percentiles ordered."""
+    t = _mk(trace_list)
+    trd = reuse_distances(t, "trd")
+    urd = reuse_distances(t, "urd")
+    mask = urd.distances >= 0
+    assert np.all(trd.distances[mask] == urd.distances[mask])
+    assert max_rd(urd) <= max_rd(trd)
+    assert urd_cache_blocks(urd) <= urd_cache_blocks(trd)
+
+
+@settings(max_examples=100, deadline=None)
+@given(trace_strategy())
+def test_classification_partition(trace_list):
+    """Every access has exactly one class; cold counts = distinct addrs."""
+    t = _mk(trace_list)
+    codes = classify_accesses(t)
+    cold = np.sum((codes == AccessClass.CR) | (codes == AccessClass.CW))
+    assert cold == t.n_unique
+    mix = request_type_mix(t)
+    assert abs(sum(mix.values()) - (1.0 if len(t) else 0.0)) < 1e-9
+
+
+@settings(max_examples=100, deadline=None)
+@given(trace_strategy())
+def test_eq3_write_accounting(trace_list):
+    """Eq. 3: WB cache writes = CR + CW + WAR + WAW."""
+    t = _mk(trace_list)
+    codes = classify_accesses(t)
+    expected = int(np.sum(np.isin(codes, [AccessClass.CR, AccessClass.CW,
+                                          AccessClass.WAR,
+                                          AccessClass.WAW])))
+    assert total_cache_writes_wb(t) == expected
+
+
+@settings(max_examples=100, deadline=None)
+@given(trace_strategy(), st.floats(0.1, 0.9))
+def test_write_policy_threshold(trace_list, thr):
+    t = _mk(trace_list)
+    wr = write_ratio(t)
+    pol = assign_write_policy(t, thr)
+    assert pol is (WritePolicy.RO if wr >= thr else WritePolicy.WB)
+
+
+def test_shards_sampling_unbiased_scale():
+    rng = np.random.default_rng(0)
+    addrs = rng.integers(0, 500, size=5000).astype(np.int64)
+    t = Trace(addrs, np.ones(5000, bool))
+    exact = reuse_distances(t, "trd")
+    samp = sampled_reuse_distances(t, "trd", rate=0.3, seed=1)
+    # scaled sample mean within 35% of exact mean (statistical)
+    assert samp.samples.size > 100
+    ratio = samp.samples.mean() / exact.samples.mean()
+    assert 0.65 < ratio < 1.35, ratio
+
+
+def test_accel_matches_exact():
+    from repro.kernels.urd_scan.ops import reuse_distances_accel
+    rng = np.random.default_rng(2)
+    addrs = rng.integers(0, 100, size=700).astype(np.int64)
+    reads = rng.random(700) < 0.6
+    t = Trace(addrs, reads)
+    for kind in ("trd", "urd"):
+        a = reuse_distances_accel(t, kind, use_kernel=True)
+        e = reuse_distances(t, kind)
+        assert np.array_equal(a.distances, e.distances)
