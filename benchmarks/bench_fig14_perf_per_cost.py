@@ -11,6 +11,8 @@ from benchmarks.common import MSR_NAMES, emit, run_scheme
 
 def main() -> dict:
     cap = 6000            # the paper's regime: ECI feasible, Centaur not
+    for scheme in ("eci", "centaur"):         # steady-state: warm jits and
+        run_scheme(scheme, cap, windows=1)    # allocators at full size
     eci, secs_e = run_scheme("eci", cap, windows=6)
     cen, secs_c = run_scheme("centaur", cap, windows=6)
     es, cs = eci.summary(), cen.summary()

@@ -15,7 +15,8 @@ import numpy as np
 from repro.core import make_manager
 from repro.data.traces import MSR_PROFILES, msr_trace
 
-__all__ = ["emit", "timed", "run_scheme", "MSR_NAMES", "DEFAULT_SIM"]
+__all__ = ["emit", "timed", "run_scheme", "MSR_NAMES", "DEFAULT_SIM",
+           "DEFAULT_ENGINE"]
 
 MSR_NAMES = list(MSR_PROFILES)
 
@@ -24,6 +25,11 @@ MSR_NAMES = list(MSR_PROFILES)
 # contention (the Fig. 3 effect), bypassed writes absorbed by the slow
 # tier's write buffer.
 DEFAULT_SIM = dict(t_fast=1.0, t_slow=20.0, flush_cost=10.0)
+
+# window-replay engine for every trace-driven benchmark: "batch" (the
+# vectorized multi-tenant engine) or "lru" (the per-access interpreter).
+# Overridable via `python -m benchmarks.run --engine lru`.
+DEFAULT_ENGINE = "batch"
 
 
 def emit(name: str, us_per_call: float, derived: str | float) -> None:
@@ -39,16 +45,25 @@ def timed(holder: dict, key: str = "s"):
 
 def run_scheme(scheme: str, capacity: int, *, windows: int = 5,
                n_per_window: int = 4000, seed: int = 0, names=None,
-               c_min: int = 50, initial_blocks: int = 100, **kw):
-    """Standard 16-tenant experiment; returns (manager, wall_seconds)."""
+               c_min: int = 50, initial_blocks: int = 100,
+               engine: str | None = None, **kw):
+    """Standard 16-tenant experiment; returns (manager, wall_seconds).
+
+    Traces are generated *outside* the timed region: the reported wall
+    time measures the scheme under test (window replay + Analyzer +
+    Actuator), not the synthetic workload generator.
+    """
     names = names or MSR_NAMES
     sim = dict(DEFAULT_SIM)
     sim.update(kw)
     mgr = make_manager(scheme, capacity, names, c_min=c_min,
-                       initial_blocks=initial_blocks, **sim)
+                       initial_blocks=initial_blocks,
+                       engine=engine or DEFAULT_ENGINE, **sim)
+    all_windows = [
+        [msr_trace(nm, n_per_window, seed=seed + 1000 * w + i)
+         for i, nm in enumerate(names)]
+        for w in range(windows)]
     t0 = time.perf_counter()
-    for w in range(windows):
-        traces = [msr_trace(nm, n_per_window, seed=seed + 1000 * w + i)
-                  for i, nm in enumerate(names)]
+    for traces in all_windows:
         mgr.run_window(traces)
     return mgr, time.perf_counter() - t0

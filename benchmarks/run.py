@@ -6,10 +6,12 @@ interpretation against the paper's published numbers.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
+from benchmarks import common
 from benchmarks import (bench_appendixA_feasible, bench_fig04_write_policy,
                         bench_fig10_allocation,
                         bench_fig12_policy_assignment,
@@ -29,6 +31,13 @@ BENCHES = [
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--engine", choices=("batch", "lru"), default="batch",
+                    help="window-replay engine for the trace-driven "
+                         "benchmarks (batch = vectorized, lru = per-access "
+                         "interpreter; results are identical)")
+    args = ap.parse_args()
+    common.DEFAULT_ENGINE = args.engine
     print("name,us_per_call,derived")
     failures = []
     all_checks: dict[str, bool] = {}

@@ -3,6 +3,8 @@
 Public API re-exports for the paper's primary contribution.
 """
 from repro.core.baselines import GlobalLRUManager, make_manager
+from repro.core.batch_sim import (reuse_distances_fast, simulate_batch,
+                                  simulate_many, stack_distances)
 from repro.core.manager import AnalyzerDecision, ECICacheManager, TenantState
 from repro.core.mrc import HitRatioFunction, build_hit_ratio_function
 from repro.core.partitioner import (PartitionResult, aggregate_latency,
@@ -23,7 +25,8 @@ __all__ = [
     "TenantState", "Trace", "WritePolicy", "aggregate_latency",
     "assign_write_policy", "build_hit_ratio_function", "classify_accesses",
     "greedy_allocate", "make_manager", "max_rd", "pgd_solve",
-    "request_type_mix", "reuse_distances", "reuse_distances_vectorized",
-    "sampled_reuse_distances", "simulate", "total_cache_writes_wb",
-    "urd_cache_blocks", "write_ratio",
+    "request_type_mix", "reuse_distances", "reuse_distances_fast",
+    "reuse_distances_vectorized", "sampled_reuse_distances", "simulate",
+    "simulate_batch", "simulate_many", "stack_distances",
+    "total_cache_writes_wb", "urd_cache_blocks", "write_ratio",
 ]

@@ -1,0 +1,572 @@
+"""Vectorized multi-tenant window replay — the batch simulation engine.
+
+Replaces the per-access Python loop in ``simulator.simulate`` with array
+programs over occurrence links, for a whole Δt window of **all tenants at
+once**.  The engine is *exact*: it reproduces ``simulate()``'s hits,
+write_hits, cache_writes, flush charges, total latency and the final LRU
+state (the interpreter remains the oracle, property-tested in
+``tests/test_batch_sim.py``).
+
+Hit-oracle math
+===============
+
+Let ``prev[i]``/``nxt[j]`` be the previous/next occurrence links of the
+access stream (``trace.prev_next_occurrence``).  Define the *stack distance*
+
+    SD(i) = #{ j : prev[i] < j < i,  nxt[j] >= i }
+
+— the number of distinct addresses touched strictly between an access and
+its previous occurrence (each contributes exactly one ``j``, its last
+occurrence inside the window).  For an LRU partition of ``C`` blocks that
+**allocates on every access** (the WB and WT policies: reads install on
+miss, writes install or touch), Mattson stack inclusion gives the exact
+oracle:
+
+    access i is resident  ⟺  prev[i] >= 0  and  SD(i) < C.
+
+``SD`` is computed without any per-access loop as ``SD(i) = F(i) − G(i)``:
+
+  * ``F(i) = #{ j < i : nxt[j] >= i }`` is the number of occurrence
+    intervals ``(j, nxt[j]]`` covering ``i`` — an O(n) difference-array
+    cumsum (it equals the number of distinct addresses seen before ``i``).
+  * ``G(i) = #{ j <= prev[i] : nxt[j] >= i }``.  Because ``nxt[prev[i]] ==
+    i``, the queries are the points themselves and ``G`` is a dominance
+    count over the point set ``(j, nxt[j])``; it is evaluated for *all*
+    accesses at once with a bottom-up merge tree (log n rounds of
+    block-sort + ``searchsorted``), O(n log² n) in vectorized numpy.
+
+Write-policy effects
+====================
+
+WB/WT share the oracle above (identical stack content; they differ only in
+latency/endurance accounting).  RO (write-around) breaks reuse chains at
+writes — a write invalidates the cached copy, so a read whose previous
+occurrence is a write is always a miss — and writes never install.  The
+trace transform is: gate residency on ``is_read[prev[i]]`` and restrict
+occupancy to reads.
+
+**RO caveat (why there is a guard):** invalidation *frees the slot
+immediately*, and LRU-with-deletion loses the stack property once a
+capacity eviction has occurred.  Counterexample at C=2 for trace
+``r(a) r(b) r(c) w(b) w(c) r(a)``: the real cache evicted ``a`` at
+``r(c)``, so the final read misses, but after the two invalidations only
+zero live blocks separate ``r(a)`` from its reuse, so any distance oracle
+says hit.  The engine therefore computes the *live count*
+``L(t) = #{ j <= t : is_read[j], nxt[j] > t }`` (O(n) cumsum); when
+``max L <= C`` the cache never fills, no eviction can occur, and
+``resident ⟺ live`` is exact — otherwise that tenant's window falls back
+to the interpreter.  WB/WT never need the guard (no deletions).
+
+Endurance / latency / flush accounting are pure array reductions:
+per-address *dirty chains* (segmented cumulative OR over residency
+periods, grouped by address), suffix distinct-counts for end-of-trace
+evictions, and ``bincount`` per tenant.  Warm cross-window state is
+handled exactly by prepending the cache content as pseudo-read accesses
+(LRU→MRU order) carrying their dirty flags; the prefix is excluded from
+the reported stats.
+
+On TPU the ``SD`` counting runs on-accelerator via the
+``repro.kernels.cache_sim`` Pallas kernel (the occupancy-masked
+generalization of ``urd_scan``); on CPU the merge-tree host path is used.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.reuse_distance import RDResult
+from repro.core.simulator import LRUCache, SimResult
+from repro.core.trace import Trace, prev_next_occurrence
+from repro.core.write_policy import WritePolicy
+
+__all__ = [
+    "count_prev_ge",
+    "stack_distances",
+    "reuse_distances_fast",
+    "simulate_batch",
+    "simulate_many",
+]
+
+
+# --------------------------------------------------------------- primitives
+def count_prev_ge(y: np.ndarray) -> np.ndarray:
+    """cnt[q] = #{ j < q : y[j] >= y[q] }, vectorized merge-tree counting.
+
+    Bottom-up merge levels: at half-size ``s`` every element in the right
+    half of a 2s-block counts the elements >= it in the left half — by
+    direct broadcast for narrow blocks, by block-local ``searchsorted``
+    (composite keys while blocks are many, a python loop once they are
+    few) for wide ones.  O(n log² n) array work, int32 throughout, no
+    per-element Python loop.  Requires ``0 <= y < 2**31 - 2``.
+    """
+    m = int(y.shape[0])
+    out = np.zeros(m, dtype=np.int64)
+    if m <= 1:
+        return out
+    y = y.astype(np.int32)
+    base = np.int64(int(y.max()) + 2)
+
+    # base level: all within-16-block pairs in one dense masked pass
+    B0 = 16
+    ms0 = -(-m // B0) * B0
+    yp0 = np.full(ms0, -1, dtype=np.int32)
+    yp0[:m] = y
+    blk = yp0.reshape(-1, B0)
+    lower = np.arange(B0)[:, None] < np.arange(B0)[None, :]   # j < q
+    cnt0 = ((blk[:, :, None] >= blk[:, None, :]) & lower[None]) \
+        .sum(axis=1, dtype=np.int64).reshape(-1)
+    out[:] = cnt0[:m]
+
+    idx = np.arange(m, dtype=np.int64)
+    s, ell = B0, 4
+    while s < m:
+        width = 2 * s
+        ms = -(-m // width) * width              # pad only to this level
+        yp = np.full(ms, -1, dtype=np.int32)     # pad < every real value
+        yp[:m] = y
+        blocks = yp.reshape(-1, width)
+        lefts = blocks[:, :s]                                    # [nb, s]
+        rights = blocks[:, s:]                                   # [nb, s]
+        nb = lefts.shape[0]
+        lefts_s = np.sort(lefts, axis=1)
+        if nb <= 16:
+            n_lt = np.concatenate([
+                np.searchsorted(lefts_s[b], rights[b])
+                for b in range(nb)])
+        else:
+            if nb * int(base) < 2**31 - 1:       # int32 composite keys
+                row = (np.arange(nb, dtype=np.int32)
+                       * np.int32(base))[:, None]
+                keys = (lefts_s + np.int32(1) + row).ravel()
+                qkeys = (rights + np.int32(1) + row).ravel()
+            else:
+                row = (np.arange(nb, dtype=np.int64) * base)[:, None]
+                keys = (lefts_s.astype(np.int64) + 1 + row).ravel()
+                qkeys = (rights.astype(np.int64) + 1 + row).ravel()
+            n_lt = (np.searchsorted(keys, qkeys)
+                    - (np.arange(nb, dtype=np.int64) * s).repeat(s))
+        # queries of this level = positions with bit `ell` set (ascending;
+        # pads sit only at the tail, so a head-slice aligns them)
+        sel = idx[(idx >> ell) & 1 == 1]
+        out[sel] += s - n_lt.reshape(-1)[:sel.size]
+        s, ell = width, ell + 1
+    return out
+
+
+def _coverage_counts(nxt: np.ndarray) -> np.ndarray:
+    """F[i] = #{ j < i : nxt[j] >= i } via a difference array, O(n)."""
+    n = nxt.shape[0]
+    d = -np.bincount(np.minimum(nxt, n) + 1,
+                     minlength=n + 2)[:n + 2]    # interval ends after nxt[j]
+    d[1:n + 1] += 1                              # starts at j+1
+    return np.cumsum(d)[:n + 1]
+
+
+def _stack_distances_host(prev: np.ndarray, nxt: np.ndarray,
+                          bounds: np.ndarray | None = None) -> np.ndarray:
+    """Exact SD per access (occupancy = every access); -1 for cold.
+
+    ``bounds`` (optional) splits the tape into independent contiguous
+    blocks (one per tenant: links never cross), processed one at a time so
+    each tenant's working set stays cache-resident.
+    """
+    n = prev.shape[0]
+    sd = np.full(n, -1, dtype=np.int64)
+    if n == 0:
+        return sd
+    if bounds is None:
+        bounds = np.array([0, n], dtype=np.int64)
+    for s, e in zip(bounds[:-1], bounds[1:]):
+        s, e = int(s), int(e)
+        if e <= s:
+            continue
+        pl = prev[s:e]
+        nl = nxt[s:e] - s
+        F = _coverage_counts(nl)
+        cnt = count_prev_ge(nl)
+        idx = np.flatnonzero(pl >= 0)            # links never cross blocks
+        sd[s + idx] = F[idx] - (cnt[pl[idx] - s] + 1)
+    return sd
+
+
+def _accel_default() -> bool:
+    """True when SD counting should run in the Pallas kernel (TPU host)."""
+    global _ACCEL
+    if _ACCEL is None:
+        try:
+            import jax
+            _ACCEL = jax.default_backend() == "tpu"
+        except Exception:  # pragma: no cover - jax always present in-tree
+            _ACCEL = False
+    return _ACCEL
+
+
+_ACCEL: bool | None = None
+
+
+def stack_distances(trace: Trace, backend: str = "auto") -> np.ndarray:
+    """Per-access LRU stack distances (TRD samples at every re-touch).
+
+    backend: "host" (numpy merge tree), "accel" (cache_sim Pallas kernel /
+    jnp oracle), or "auto" (kernel on TPU, host otherwise).
+    """
+    prev, nxt = prev_next_occurrence(trace.addrs)
+    if backend == "auto":
+        backend = "accel" if _accel_default() else "host"
+    if backend == "accel":
+        from repro.kernels.cache_sim.ops import stack_distances_accel
+        return stack_distances_accel(prev, nxt)
+    return _stack_distances_host(prev, nxt)
+
+
+def reuse_distances_fast(trace: Trace, kind: str = "urd",
+                         backend: str = "auto") -> RDResult:
+    """Drop-in for ``reuse_distances`` built on the vectorized SD engine.
+
+    Same output, no per-access Python loop: the production Analyzer path.
+    """
+    if kind not in ("trd", "urd"):
+        raise ValueError(f"kind must be 'trd' or 'urd', got {kind!r}")
+    sd = stack_distances(trace, backend)
+    out = sd.copy()
+    if kind == "urd":
+        out[~trace.is_read] = -1
+    return RDResult(out, kind)
+
+
+# ------------------------------------------------------------ batch replay
+def _ro_token_replay(is_read_blk: np.ndarray, prev_blk: np.ndarray,
+                     nxt_blk: np.ndarray, force_blk: np.ndarray,
+                     cap: int) -> tuple[np.ndarray, np.ndarray, int]:
+    """Exact RO (write-around) replay under capacity pressure, O(n).
+
+    Token formulation: every read position ``j`` is a cache slot "token"
+    alive on ``(j, nxt[j])`` — independent of hit/miss, because a read hit
+    retires the previous token and births a new one simultaneously (net
+    resident count 0) while a miss is a pure birth and a write-hit a pure
+    death.  Evictions only *shorten* a token's death time, and the LRU
+    victim is always the minimum live token, which is non-decreasing over
+    time — so a single forward bottom pointer suffices and the whole
+    replay is one O(n) integer pass with no dictionary.  Afterwards every
+    residency question is vectorized: access ``i`` hit ⟺ its previous
+    occurrence ``p`` was a read whose token survived to its natural death
+    (``death[p] == i``).
+
+    Returns (death, dirty, flushes): ``death[j]`` = when token j left the
+    cache (== ``nxt_blk[j]`` iff never evicted), ``dirty[j]`` = the dirty
+    flag the token carried (inherited from warm-prefix blocks through hit
+    chains; RO installs are clean), ``flushes`` = dirty evictions.
+    """
+    n = int(is_read_blk.shape[0])
+    rd = is_read_blk.tolist()
+    pv = prev_blk.tolist()
+    death = nxt_blk.tolist()
+    dirty = force_blk.tolist()
+    flushes = 0
+    resident = 0
+    b = 0                                        # oldest-resident candidate
+    for t in range(n):
+        p = pv[t]
+        if rd[t]:
+            if p >= 0 and rd[p] and death[p] == t:
+                dirty[t] = dirty[p]              # hit: token renewal
+            else:
+                resident += 1                    # miss: install clean
+                if resident > cap:
+                    while not rd[b] or death[b] <= t:
+                        b += 1
+                    death[b] = t                 # evict oldest resident
+                    if dirty[b]:
+                        flushes += 1
+                    resident -= 1
+        elif p >= 0 and rd[p] and death[p] == t:
+            resident -= 1                        # write-hit: invalidate
+    return (np.asarray(death, dtype=np.int64),
+            np.asarray(dirty, dtype=bool), flushes)
+
+
+def _segment_heads(sorted_vals: np.ndarray) -> np.ndarray:
+    head = np.ones(sorted_vals.shape[0], dtype=bool)
+    head[1:] = sorted_vals[1:] != sorted_vals[:-1]
+    return head
+
+
+def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
+                  t_fast: float = 1.0, t_slow: float = 20.0,
+                  t_write_bypass: float | None = None,
+                  flush_cost: float = 0.0,
+                  caches: list[LRUCache | None] | None = None,
+                  return_window_rd: bool = False):
+    """Replay one window for every tenant at once (exact, vectorized).
+
+    Mirrors ``simulate()`` per tenant: when ``caches[k]`` is given its
+    capacity wins over ``capacities[k]``, warm content seeds the replay,
+    and the cache object is left in the exact final LRU state.  RO tenants
+    whose window fails the no-eviction guard (see module docstring) are
+    replayed with the interpreter instead — same results, just slower.
+
+    With ``return_window_rd=True`` also returns, per tenant, the TRD
+    sample array of the *window* trace (``reuse_distances(trace, "trd")``,
+    -1 at cold accesses) — the tape's stack distances restricted to
+    window-internal reuses, so the Analyzer gets its reuse distances for
+    free from the same counting pass; ``None`` where the tenant was not
+    replayed on the tape (empty window or zero capacity).
+    """
+    if t_write_bypass is None:
+        t_write_bypass = 1.2 * t_fast
+    T = len(traces)
+    caches = caches if caches is not None else [None] * T
+    if policies is None:
+        policies = [WritePolicy.WB] * T
+    results: list[SimResult | None] = [None] * T
+
+    vec: list[int] = []
+    for k in range(T):
+        tr, c = traces[k], caches[k]
+        cap = int(c.capacity if c is not None else capacities[k])
+        pol = policies[k]
+        n = len(tr)
+        if n == 0:
+            results[k] = SimResult(capacity=cap, policy=pol.value)
+            continue
+        if cap <= 0:
+            r = SimResult(capacity=cap, policy=pol.value)
+            r.reads = int(np.sum(tr.is_read))
+            r.writes = n - r.reads
+            r.total_latency = r.reads * t_slow + r.writes * t_write_bypass
+            results[k] = r
+            continue
+        vec.append(k)
+
+    rds: list[np.ndarray | None] = [None] * T
+    if not vec:
+        return (results, rds) if return_window_rd else results
+
+    # ------------------------------------------------------ build the tape
+    # one contiguous block per tenant: [warm prefix (pseudo-reads carrying
+    # dirty flags, LRU -> MRU)] + [window accesses]; address ids remapped
+    # per tenant so blocks never interact.
+    parts_addr, parts_read, parts_force = [], [], []
+    starts, bodies, ends = [], [], []
+    off = 0
+    for k in vec:
+        tr, c = traces[k], caches[k]
+        if c is not None and len(c) > 0:
+            paddrs, pdirty = c.state_arrays()
+        else:
+            paddrs = np.zeros(0, np.int64)
+            pdirty = np.zeros(0, bool)
+        parts_addr.append(np.concatenate([paddrs, tr.addrs]))
+        parts_read.append(np.concatenate(
+            [np.ones(paddrs.size, bool), tr.is_read]))
+        parts_force.append(np.concatenate(
+            [pdirty, np.zeros(len(tr), bool)]))
+        starts.append(off)
+        bodies.append(off + paddrs.size)
+        off += paddrs.size + len(tr)
+        ends.append(off)
+
+    orig_addr = np.concatenate(parts_addr)
+    is_read = np.concatenate(parts_read)
+    force_dirty = np.concatenate(parts_force)
+    m = off
+    pos = np.arange(m, dtype=np.int64)
+    starts_a = np.array(starts, np.int64)
+    bodies_a = np.array(bodies, np.int64)
+    ends_a = np.array(ends, np.int64)
+    lens = ends_a - starts_a
+    tid = np.repeat(np.arange(len(vec), dtype=np.int64), lens)
+    cap_of = np.repeat(np.array(
+        [caches[k].capacity if caches[k] is not None else int(capacities[k])
+         for k in vec], np.int64), lens)
+    pol_codes = np.array([{"wb": 0, "wt": 1, "ro": 2}[policies[k].value]
+                          for k in vec], np.int64)
+    pol_of = np.repeat(pol_codes, lens)
+    end_of = np.repeat(ends_a, lens)
+    counted = pos >= np.repeat(bodies_a, lens)
+    is_write = ~is_read
+
+    # occurrence links from per-tenant stable argsorts (cache-resident;
+    # blocks never interact, so cross-block address collisions are severed
+    # by forcing segment heads at block starts); the same ordering is
+    # reused below for the dirty-chain segmented reductions
+    ordi = np.empty(m, dtype=np.int64)
+    for t in range(len(vec)):
+        s, e = starts[t], ends[t]
+        ordi[s:e] = s + np.argsort(orig_addr[s:e], kind="stable")
+    sorted_vals = orig_addr[ordi]
+    same_prev = np.zeros(m, dtype=bool)
+    same_prev[1:] = sorted_vals[1:] == sorted_vals[:-1]
+    same_prev[starts_a] = False                  # sever cross-block ties
+    prev = np.full(m, -1, dtype=np.int64)
+    prev[ordi[1:]] = np.where(same_prev[1:], ordi[:-1], -1)
+    nxt = np.full(m, m, dtype=np.int64)
+    nxt[ordi[:-1]] = np.where(same_prev[1:], ordi[1:], m)
+    nxt_c = np.minimum(nxt, end_of)
+
+    # --------------------------------------- RO residency: guard or tokens
+    # L[t] = live blocks after access t assuming no eviction.  While
+    # L <= C the cache can never have filled, so no eviction has occurred
+    # and resident ⟺ live is exact.  Tenants whose window exceeds that
+    # bound are replayed by the O(n) eviction-token loop instead
+    # (``_ro_token_replay``) — still exact, still loop-free afterwards:
+    # the loop only shortens token deaths, and hits are recovered as
+    # ``death[prev] == i``.
+    tokens: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
+    if np.any(pol_codes == 2):
+        occ_idx = np.flatnonzero(is_read)
+        d = (np.bincount(occ_idx, minlength=m + 1)
+             - np.bincount(nxt_c[occ_idx], minlength=m + 1))
+        L = np.cumsum(d[:m])
+        for t, k in enumerate(vec):
+            if pol_codes[t] != 2:
+                continue
+            s, e = starts[t], ends[t]
+            if int(L[s:e].max()) > int(cap_of[s]):
+                tokens[t] = _ro_token_replay(
+                    is_read[s:e], prev[s:e] - s, nxt_c[s:e] - s,
+                    force_dirty[s:e], int(cap_of[s]))
+
+    # -------------------------------------------------- residency oracle
+    # (the kernel's counting window (prev[i], i) never crosses a tenant
+    # block for hot accesses and cold rows are masked, so the whole tape
+    # goes through one kernel launch on TPU)
+    if _accel_default():
+        from repro.kernels.cache_sim.ops import stack_distances_accel
+        sd = stack_distances_accel(prev, nxt_c)
+    else:
+        sd = _stack_distances_host(prev, nxt_c,
+                                   bounds=np.concatenate([starts_a, [m]]))
+    if return_window_rd:
+        # window-internal reuse distances: reuses whose previous occurrence
+        # is a warm-prefix pseudo-access are cold from the Analyzer's view
+        for t, k in enumerate(vec):
+            sl = slice(int(bodies_a[t]), int(ends_a[t]))
+            rds[k] = np.where(prev[sl] >= bodies_a[t], sd[sl], -1)
+    hot = prev >= 0
+    prev_safe = np.maximum(prev, 0)
+    res_wbwt = hot & (sd < cap_of) & (sd >= 0)
+    res_ro = hot & is_read[prev_safe]
+    resident = np.where(pol_of == 2, res_ro, res_wbwt)
+    for t, (death, _, _) in tokens.items():
+        s, e = starts[t], ends[t]
+        pl = prev[s:e] - s
+        pls = np.maximum(pl, 0)
+        blk_read = is_read[s:e]
+        resident[s:e] = ((pl >= 0) & blk_read[pls]
+                         & (death[pls] == np.arange(e - s)))
+
+    # ------------------------------------------------------- dirty chains
+    # group by address, segment at installs (non-resident accesses); the
+    # dirty flag after each access is a segmented reduction:
+    #   WB       : OR of (is_write | forced) over the period so far
+    #   WT / RO  : forced flag at the period head, cleared by any write
+    #              (WT write-through propagates -> cached copy is clean;
+    #               RO writes invalidate, the flag only matters for warm
+    #               prefix blocks)
+    head = _segment_heads(sorted_vals) | ~resident[ordi]
+    head[starts_a] = True                        # sever cross-block ties
+    head_pos = np.maximum.accumulate(np.where(head, np.arange(m), -1))
+    any_force = bool(force_dirty.any())
+    all_wb = bool(np.all(pol_codes == 0))
+    w_wb = (is_write | force_dirty)[ordi].astype(np.int64)
+    cw_wb = np.cumsum(w_wb)
+    dirty_wb_s = (cw_wb - cw_wb[head_pos] + w_wb[head_pos]) > 0
+    if any_force and not all_wb:
+        w_any = is_write[ordi].astype(np.int64)
+        cw_any = np.cumsum(w_any)
+        seg_writes = cw_any - cw_any[head_pos] + w_any[head_pos]
+        dirty_chain_s = force_dirty[ordi][head_pos] & (seg_writes == 0)
+    else:
+        # WT/RO blocks can only be dirty via warm-prefix flags
+        dirty_chain_s = np.zeros(m, dtype=bool)
+    dirty_after = np.empty(m, dtype=bool)
+    dirty_after[ordi] = np.where(pol_of[ordi] == 0, dirty_wb_s,
+                                 dirty_chain_s)
+
+    # ------------------------------------------------- flush accounting
+    # an eviction displaces the block last touched at j iff its next
+    # occurrence misses, or (no next occurrence) >= C distinct addresses
+    # follow it; dirty evictions charge flush_cost (WB/WT only: RO fast
+    # path proved no evictions happen).
+    last = nxt_c == end_of
+    cl = np.cumsum(last.astype(np.int64))
+    D = cl[end_of - 1] - cl
+    if flush_cost > 0.0:
+        miss_next = np.zeros(m, dtype=bool)
+        nz = ~last
+        miss_next[nz] = ~resident[nxt_c[nz]]
+        evicted = np.where(last, D >= cap_of, miss_next)
+        flush_ev = dirty_after & evicted & (pol_of != 2)
+        flush_per = np.bincount(tid[flush_ev], minlength=len(vec))
+    else:
+        flush_per = np.zeros(len(vec), np.int64)
+    for t, (_, _, fl) in tokens.items():         # RO evictions under pressure
+        flush_per[t] += fl
+
+    # ------------------------------------------------------- per-tenant stats
+    # one fused bincount: code = 4*tenant + 2*is_read + resident
+    code = tid * 4 + (is_read.astype(np.int64) * 2
+                      + resident.astype(np.int64))
+    cnts = np.bincount(code[counted], minlength=4 * len(vec)) \
+        .reshape(len(vec), 4)
+    reads_per = cnts[:, 2] + cnts[:, 3]
+    rhits_per = cnts[:, 3]
+    writes_per = cnts[:, 0] + cnts[:, 1]
+    whits_per = cnts[:, 1]
+
+    for t, k in enumerate(vec):
+        pol = policies[k]
+        cap = int(cap_of[starts[t]])
+        r = SimResult(capacity=cap, policy=pol.value)
+        r.reads = int(reads_per[t])
+        r.read_hits = int(rhits_per[t])
+        r.writes = int(writes_per[t])
+        r.write_hits = int(whits_per[t])
+        rmiss = r.reads - r.read_hits
+        fl = int(flush_per[t])
+        if pol is WritePolicy.WB:
+            r.cache_writes = rmiss + r.writes
+            r.total_latency = (r.read_hits * t_fast + rmiss * t_slow
+                               + r.writes * t_fast + fl * flush_cost)
+        elif pol is WritePolicy.WT:
+            r.cache_writes = rmiss + r.writes
+            r.total_latency = (r.read_hits * t_fast + rmiss * t_slow
+                               + r.writes * t_write_bypass
+                               + fl * flush_cost)
+        else:
+            r.cache_writes = rmiss
+            r.total_latency = (r.read_hits * t_fast + rmiss * t_slow
+                               + r.writes * t_write_bypass
+                               + fl * flush_cost)
+
+        # ------------------------------------------- final LRU state
+        c = caches[k]
+        if c is not None:
+            sl = slice(starts[t], ends[t])
+            if t in tokens:
+                death, tdirty, _ = tokens[t]
+                keep = is_read[sl] & (death == ends[t] - starts[t])
+                dirty_keep = tdirty[keep]
+            else:
+                blk_last = last[sl]
+                if pol is WritePolicy.RO:
+                    keep = blk_last & is_read[sl]
+                else:
+                    keep = blk_last & (D[sl] < cap)
+                dirty_keep = dirty_after[starts[t]:ends[t]][keep]
+            js = np.flatnonzero(keep) + starts[t]       # ascending = LRU->MRU
+            c.set_state_arrays(orig_addr[js], dirty_keep)
+        results[k] = r
+    return (results, rds) if return_window_rd else results
+
+
+def simulate_batch(trace: Trace, capacity: int,
+                   policy: WritePolicy = WritePolicy.WB,
+                   t_fast: float = 1.0, t_slow: float = 20.0,
+                   t_write_bypass: float | None = None,
+                   flush_cost: float = 0.0,
+                   cache: LRUCache | None = None) -> SimResult:
+    """Drop-in vectorized replacement for ``simulator.simulate``."""
+    return simulate_many([trace], [capacity], [policy], t_fast=t_fast,
+                         t_slow=t_slow, t_write_bypass=t_write_bypass,
+                         flush_cost=flush_cost, caches=[cache])[0]

@@ -22,6 +22,7 @@ from typing import Callable
 
 import numpy as np
 
+from repro.core.batch_sim import reuse_distances_fast, simulate_many
 from repro.core.mrc import HitRatioFunction, build_hit_ratio_function
 from repro.core.partitioner import (PartitionResult, greedy_allocate,
                                     pgd_solve)
@@ -76,6 +77,12 @@ class ECICacheManager:
 
     ``rd_kind='trd'`` + ``adaptive_policy=False`` turns this manager into the
     **Centaur** baseline (TRD sizing, WB everywhere) — see ``baselines.py``.
+
+    ``engine`` selects the window-replay path: ``"batch"`` (default) replays
+    every tenant's window at once through the vectorized stack-distance
+    engine (``repro.core.batch_sim``, exact — the Analyzer additionally
+    reuses its counting pass for the reuse distances), ``"lru"`` the
+    stateful per-access interpreter.  Both produce identical results.
     """
 
     def __init__(self, capacity: int, tenant_names: list[str],
@@ -86,7 +93,10 @@ class ECICacheManager:
                  sample_rate: float | None = None,
                  initial_blocks: int | None = None,
                  percentile: float = 100.0,
-                 partition_fn: Callable = pgd_solve):
+                 partition_fn: Callable = pgd_solve,
+                 engine: str = "batch"):
+        if engine not in ("batch", "lru"):
+            raise ValueError(f"engine must be 'batch' or 'lru', got {engine!r}")
         self.capacity = int(capacity)
         self.c_min = int(c_min)
         self.w_threshold = float(w_threshold)
@@ -99,6 +109,7 @@ class ECICacheManager:
         self.sample_rate = sample_rate
         self.percentile = percentile
         self.partition_fn = partition_fn
+        self.engine = engine
         init = int(initial_blocks if initial_blocks is not None else c_min)
         self.tenants = [TenantState(n, LRUCache(init)) for n in tenant_names]
         self.history: list[AnalyzerDecision] = []
@@ -119,26 +130,49 @@ class ECICacheManager:
     def _rd(self, trace: Trace) -> RDResult:
         if self.sample_rate is not None and len(trace) > 0:
             return sampled_reuse_distances(trace, self.rd_kind, self.sample_rate)
-        return reuse_distances(trace, self.rd_kind)
+        return reuse_distances_fast(trace, self.rd_kind)
 
-    def analyze(self) -> AnalyzerDecision:
-        """Alg. 1 / Alg. 4: run at every Δt window boundary."""
+    def analyze(self, window_trd: dict[int, np.ndarray] | None = None
+                ) -> AnalyzerDecision:
+        """Alg. 1 / Alg. 4: run at every Δt window boundary.
+
+        ``window_trd`` optionally carries per-tenant raw TRD sample arrays
+        already computed by the batch engine's counting pass (identical to
+        ``reuse_distances(trace, "trd").distances``); reuse them instead of
+        re-deriving distances from scratch.
+        """
+        window_trd = window_trd or {}
         active = [t for t in self.tenants if t.active]
         hs: list[HitRatioFunction] = []
-        for t in active:
+        for i, t in enumerate(self.tenants):
+            if not t.active:
+                continue
             tr = t.window_trace()
-            rd = self._rd(tr)
+            raw = window_trd.get(i)
+            if raw is not None and self.sample_rate is None:
+                d = raw if self.rd_kind == "trd" else \
+                    np.where(tr.is_read, raw, -1)
+                rd = RDResult(d, self.rd_kind)
+            else:
+                raw = None
+                rd = self._rd(tr)
             t.h_fn = build_hit_ratio_function(rd)
             t.urd_size = urd_cache_blocks(rd, self.percentile)
             hs.append(t.h_fn)
+            if self.adaptive_policy:
+                if raw is not None:
+                    # Alg. 3 writeRatio = (WAW + WAR)/n: write re-touches
+                    # are exactly the writes with a TRD sample
+                    n = max(len(tr), 1)
+                    wr = float(np.sum((raw >= 0) & ~tr.is_read)) / n
+                    t.policy = (WritePolicy.RO if wr >= self.w_threshold
+                                else WritePolicy.WB)
+                else:
+                    t.policy = assign_write_policy(tr, self.w_threshold)
 
         part = self.partition_fn(hs, self.capacity, self.t_fast, self.t_slow,
                                  c_min=self.c_min)
-        policies = []
-        for t in active:
-            if self.adaptive_policy:
-                t.policy = assign_write_policy(t.window_trace(), self.w_threshold)
-            policies.append(t.policy)
+        policies = [t.policy for t in active]
 
         sizes_full = np.zeros(len(self.tenants), dtype=np.int64)
         k = 0
@@ -160,31 +194,52 @@ class ECICacheManager:
                 t.clear_window()
 
     # --------------------------------------------------------- trace replay
-    def run_window(self, traces: list[Trace | None]) -> None:
+    def _accumulate(self, t: TenantState, res: SimResult) -> None:
+        agg = t.result
+        agg.reads += res.reads; agg.read_hits += res.read_hits
+        agg.writes += res.writes; agg.write_hits += res.write_hits
+        agg.cache_writes += res.cache_writes
+        agg.total_latency += res.total_latency
+        agg.capacity = t.cache.capacity
+        agg.policy = t.policy.value
+
+    def run_window(self, traces: list[Trace | None],
+                   engine: str | None = None) -> None:
         """Replay one Δt window for every tenant, then analyze + actuate.
 
         ``traces[i] is None`` marks tenant i as finished.
         """
+        engine = self.engine if engine is None else engine
         for i, tr in enumerate(traces):
-            t = self.tenants[i]
-            if tr is None:
-                if t.active:
-                    self.retire_tenant(i)
-                continue
-            self.record(i, tr.addrs, tr.is_read)
-            res = simulate(tr, t.cache.capacity, t.policy,
-                           self.t_fast, self.t_slow,
-                           t_write_bypass=self.t_write_bypass,
-                           flush_cost=self.flush_cost, cache=t.cache)
-            # accumulate into the tenant's running totals
-            agg = t.result
-            agg.reads += res.reads; agg.read_hits += res.read_hits
-            agg.writes += res.writes; agg.write_hits += res.write_hits
-            agg.cache_writes += res.cache_writes
-            agg.total_latency += res.total_latency
-            agg.capacity = t.cache.capacity
-            agg.policy = t.policy.value
-        decision = self.analyze()
+            if tr is None and self.tenants[i].active:
+                self.retire_tenant(i)
+
+        idx = [i for i, tr in enumerate(traces) if tr is not None]
+        for i in idx:
+            self.record(i, traces[i].addrs, traces[i].is_read)
+
+        window_trd: dict[int, np.ndarray] | None = None
+        if engine == "batch":
+            results, rds = simulate_many(
+                [traces[i] for i in idx],
+                policies=[self.tenants[i].policy for i in idx],
+                t_fast=self.t_fast, t_slow=self.t_slow,
+                t_write_bypass=self.t_write_bypass,
+                flush_cost=self.flush_cost,
+                caches=[self.tenants[i].cache for i in idx],
+                return_window_rd=True)
+            window_trd = {i: rd for i, rd in zip(idx, rds) if rd is not None}
+            for i, res in zip(idx, results):
+                self._accumulate(self.tenants[i], res)
+        else:
+            for i in idx:
+                t = self.tenants[i]
+                res = simulate(traces[i], t.cache.capacity, t.policy,
+                               self.t_fast, self.t_slow,
+                               t_write_bypass=self.t_write_bypass,
+                               flush_cost=self.flush_cost, cache=t.cache)
+                self._accumulate(t, res)
+        decision = self.analyze(window_trd)
         self.actuate(decision)
 
     # ------------------------------------------------------------- metrics

@@ -13,7 +13,6 @@ Eq. 2 (a latency-weighted mean over the whole request stream).
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
 
 import numpy as np
@@ -68,7 +67,7 @@ class HitRatioFunction:
 
         Returns (c, 0.0) when the curve is already saturated.
         """
-        k = bisect.bisect_right(list(self.edges), c)
+        k = int(np.searchsorted(self.edges, c, side="right"))
         if k >= len(self.edges):
             return c, 0.0
         nxt = int(self.edges[k])

@@ -15,13 +15,25 @@ writes that bypass the fast tier (RO/WT) -> t_write_bypass.  On the paper's
 testbed the HDD RAID sits behind a battery-backed controller write cache, so
 bypassed writes are acknowledged far faster than a random HDD read —
 t_write_bypass defaults to 1.2*t_fast, not t_slow.  Optionally, dirty evictions
-under WB charge ``flush_cost`` each (write-back flush competing with
-foreground I/O — the effect behind the paper's Fig. 3 observation).
+charge ``flush_cost`` each (write-back flush competing with foreground I/O —
+the effect behind the paper's Fig. 3 observation).
+
+Dirty-state semantics: WB writes dirty the cached block; WT writes propagate
+synchronously so the cached copy is always *clean* after a write; RO writes
+invalidate (and drop the dirty flag of) any cached copy.  The ``c_dirty``
+shadow map mirrors the LRU's own flags exactly — evictions from every insert
+path and RO invalidations pop their entries, so no stale dirty flag survives
+across long traces or policy switches on a persistent cache.
+
+``simulate`` is the per-access oracle; ``repro.core.batch_sim`` replays the
+same semantics vectorized for all tenants of a Δt window at once.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import OrderedDict
+
+import numpy as np
 
 from repro.core.trace import Trace
 from repro.core.write_policy import WritePolicy
@@ -69,16 +81,55 @@ class SimResult:
 
 
 class LRUCache:
-    """Minimal LRU set of block addresses with a capacity in blocks."""
+    """Minimal LRU set of block addresses with a capacity in blocks.
+
+    Two interchangeable representations of the same state:
+
+      * an ``OrderedDict`` (LRU -> MRU, addr -> dirty) driving the
+        per-access interpreter paths (``_od``, materialized lazily);
+      * a compact array pair set by the batch engine
+        (``set_state_arrays``/``state_arrays``) so whole-window vectorized
+        replay never pays per-entry dict churn.  ``resize`` shrinks the
+        array form by slicing.
+    """
 
     def __init__(self, capacity: int):
         self.capacity = int(capacity)
-        self._od: OrderedDict[int, bool] = OrderedDict()  # addr -> dirty
+        self._od: OrderedDict[int, bool] = OrderedDict()
+        self._addrs = None                       # int64[k], LRU -> MRU
+        self._dirty = None                       # bool[k]
+
+    def __getattr__(self, name):
+        # materialize the dict form on first access after set_state_arrays
+        # (__getattr__ only fires while "_od" is absent, so interpreter
+        # paths pay plain-attribute cost afterwards)
+        if name == "_od":
+            od = OrderedDict(zip(self._addrs.tolist(), self._dirty.tolist()))
+            self._addrs = self._dirty = None
+            self._od = od
+            return od
+        raise AttributeError(name)
+
+    def set_state_arrays(self, addrs, dirty) -> None:
+        """Replace the whole state (LRU->MRU order) without dict churn."""
+        self.__dict__.pop("_od", None)
+        self._addrs = addrs
+        self._dirty = dirty
+
+    def state_arrays(self):
+        """(addrs, dirty) LRU->MRU, without forcing the dict form."""
+        if "_od" not in self.__dict__:
+            return self._addrs, self._dirty
+        k = len(self._od)
+        return (np.fromiter(self._od.keys(), dtype=np.int64, count=k),
+                np.fromiter(self._od.values(), dtype=bool, count=k))
 
     def __contains__(self, addr: int) -> bool:
         return addr in self._od
 
     def __len__(self) -> int:
+        if "_od" not in self.__dict__:
+            return int(self._addrs.shape[0])
         return len(self._od)
 
     def touch(self, addr: int) -> None:
@@ -103,9 +154,27 @@ class LRUCache:
             self._od[addr] = True
             self._od.move_to_end(addr)
 
+    def mark_clean(self, addr: int) -> None:
+        """Touch + clear dirty (a write-through made the copy current)."""
+        if addr in self._od:
+            self._od[addr] = False
+            self._od.move_to_end(addr)
+
+    def invalidate(self, addr: int) -> None:
+        """Drop a cached block (RO write-around invalidation)."""
+        self._od.pop(addr, None)
+
     def resize(self, capacity: int) -> list[int]:
         """Shrink/grow; returns evicted addrs (LRU-first) on shrink."""
         self.capacity = int(capacity)
+        if "_od" not in self.__dict__:           # array form: slice LRU off
+            k = int(self._addrs.shape[0]) - self.capacity
+            if k <= 0:
+                return []
+            out = self._addrs[:k].tolist()
+            self._addrs = self._addrs[k:]
+            self._dirty = self._dirty[k:]
+            return out
         out = []
         while len(self._od) > self.capacity:
             a, _ = self._od.popitem(last=False)
@@ -127,7 +196,10 @@ def simulate(trace: Trace, capacity: int,
     r = SimResult(capacity=cap, policy=policy.value)
 
     def charge_flush(evicted: int | None) -> None:
-        if evicted is not None and flush_cost > 0.0 and c_dirty.pop(evicted, False):
+        # always pop: c_dirty must mirror residency or stale dirty flags
+        # leak across long traces / policy switches on a persistent cache
+        if evicted is not None and c_dirty.pop(evicted, False) \
+                and flush_cost > 0.0:
             r.total_latency += flush_cost
 
     # dirty tracking mirrors the LRU's own flags but survives eviction return
@@ -166,15 +238,21 @@ def simulate(trace: Trace, capacity: int,
             elif policy is WritePolicy.WT:
                 if a in c:
                     r.write_hits += 1
-                    c.mark_dirty(a)
+                    # write-through propagates synchronously: the cached
+                    # copy is up to date with the backing store -> clean
+                    # (marking it dirty would double-charge a later flush)
+                    c.mark_clean(a)
+                    c_dirty[a] = False
                     r.cache_writes += 1
                 elif cap > 0:
-                    c.insert(a, dirty=False)
+                    charge_flush(c.insert(a, dirty=False))
+                    c_dirty[a] = False
                     r.cache_writes += 1
                 r.total_latency += t_write_bypass  # propagate synchronously
             else:  # RO: write-around — invalidate any stale cached copy
                 if a in c:
                     r.write_hits += 1
-                    c._od.pop(a, None)         # invalidate (no SSD write)
+                    c.invalidate(a)            # no SSD write
+                    c_dirty.pop(a, None)       # drop its dirty flag too
                 r.total_latency += t_write_bypass
     return r

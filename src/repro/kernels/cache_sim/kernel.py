@@ -1,20 +1,18 @@
-"""URD/TRD reuse-distance counting — Pallas TPU kernel.
+"""Occupancy-masked LRU stack-distance counting — Pallas TPU kernel.
 
-The paper's Analyzer spends its budget computing reuse distances (Appendix B
-reports up to 22.7 s per window with modified PARDA on the host CPU).  On
-TPU we use the counting formulation (DESIGN.md §5):
+The batch simulation engine (``repro.core.batch_sim``) turns window replay
+into the counting problem
 
-    RD(i) = #{ j : prev[i] < j < i  and  nxt[j] >= i }
+    SD(i) = #{ j : prev[i] < j < i,  occ[j],  nxt[j] >= i }
 
-(each distinct address between two touches contributes exactly one j — its
-last occurrence inside the window).  This is an O(n²/tile) masked-count
-over the (i, j) plane: embarrassingly parallel over i-tiles, sequential
-accumulation over j-tiles — ideal VPU work, and ~3 orders of magnitude
-faster than the pointer-chasing treap on host.  URD masking (only read
-re-touches sample) is applied by the caller via ``sample_mask``.
+(an access is resident iff SD < capacity; see the batch_sim docstring for
+the derivation).  This is the ``urd_scan`` counting formulation with one
+extra per-``j`` occupancy mask: ``occ = 1`` everywhere for WB/WT (every
+access installs or touches), ``occ = is_read`` for RO write-around.
 
-Grid: (num_i_tiles, num_j_tiles), j innermost with an fp32 VMEM accumulator
-revisited across j-tiles.
+Same layout as ``urd_scan``: O(n²/tile) masked counts over the (i, j)
+plane, grid (num_i_tiles, num_j_tiles) with j innermost and an fp32 VMEM
+accumulator revisited across j-tiles — pure VPU work.
 """
 from __future__ import annotations
 
@@ -27,10 +25,10 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import tpu_compiler_params
 
-__all__ = ["urd_scan"]
+__all__ = ["cache_sim_scan"]
 
 
-def _kernel(prev_ref, nxt_ref, out_ref, acc_scr, *, tile: int):
+def _kernel(prev_ref, nxt_ref, occ_ref, out_ref, acc_scr, *, tile: int):
     ii = pl.program_id(0)
     jj = pl.program_id(1)
     nj = pl.num_programs(1)
@@ -45,11 +43,13 @@ def _kernel(prev_ref, nxt_ref, out_ref, acc_scr, *, tile: int):
     j_idx = jj * tile + jax.lax.broadcasted_iota(
         jnp.int32, (tile, tile), 1)                      # cols: j
     nxt_j = nxt_ref[0]                                   # [1, tile] int32
+    occ_j = occ_ref[0]                                   # [1, tile] int32
 
     contrib = (
         (j_idx > prev_i.reshape(tile, 1))
         & (j_idx < i_idx)
         & (nxt_j.reshape(1, tile) >= i_idx)
+        & (occ_j.reshape(1, tile) > 0)
     )
     acc_scr[...] += jnp.sum(contrib.astype(jnp.float32), axis=1,
                             keepdims=True)
@@ -59,24 +59,25 @@ def _kernel(prev_ref, nxt_ref, out_ref, acc_scr, *, tile: int):
         out_ref[0] = acc_scr[...].reshape(tile).astype(jnp.int32)
 
 
-def urd_scan(prev: jax.Array, nxt: jax.Array, *, tile: int = 256,
-             interpret: bool = False) -> jax.Array:
-    """prev/nxt: int32[n] occurrence links -> counts int32[n].
+def cache_sim_scan(prev: jax.Array, nxt: jax.Array, occ: jax.Array, *,
+                   tile: int = 256, interpret: bool = False) -> jax.Array:
+    """prev/nxt int32[n] occurrence links, occ int32[n] -> counts int32[n].
 
-    counts[i] = distinct addresses strictly between prev[i] and i.
-    Cold accesses (prev[i] < 0) return counts over j<i with nxt>=i of the
-    full prefix — callers mask them out with the sample mask.
+    counts[i] = occupying distinct addresses strictly between prev[i] and i.
+    Cold accesses (prev[i] < 0) return prefix counts — callers mask them.
     """
     n = prev.shape[0]
     nt = -(-n // tile)
     pad = nt * tile - n
     if pad:
-        # padded i rows: prev = n (so j > prev never holds -> count 0)
+        # padded i rows: prev = n (j > prev never holds -> count 0)
         prev = jnp.pad(prev, (0, pad), constant_values=n)
-        # padded j cols: nxt = -1 (so nxt >= i never holds -> no contribution)
+        # padded j cols: never occupy, and nxt = -1 as belt-and-braces
         nxt = jnp.pad(nxt, (0, pad), constant_values=-1)
+        occ = jnp.pad(occ, (0, pad), constant_values=0)
     prev2 = prev.reshape(nt, tile).astype(jnp.int32)
     nxt2 = nxt.reshape(nt, tile).astype(jnp.int32)
+    occ2 = occ.reshape(nt, tile).astype(jnp.int32)
 
     kernel = functools.partial(_kernel, tile=tile)
     out = pl.pallas_call(
@@ -85,6 +86,7 @@ def urd_scan(prev: jax.Array, nxt: jax.Array, *, tile: int = 256,
         in_specs=[
             pl.BlockSpec((1, tile), lambda i, j: (i, 0)),
             pl.BlockSpec((1, tile), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tile), lambda i, j: (j, 0)),
         ],
         out_specs=pl.BlockSpec((1, tile), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nt, tile), jnp.int32),
@@ -92,5 +94,5 @@ def urd_scan(prev: jax.Array, nxt: jax.Array, *, tile: int = 256,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(prev2, nxt2)
+    )(prev2, nxt2, occ2)
     return out.reshape(nt * tile)[:n]

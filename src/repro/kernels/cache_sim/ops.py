@@ -1,0 +1,49 @@
+"""Jit'd wrapper: occurrence links -> LRU stack distances on accelerator.
+
+``stack_distances_accel`` is the TPU path of the batch simulation engine
+(``repro.core.batch_sim.stack_distances``): counting runs in the Pallas
+kernel on TPU, or via the jnp oracle elsewhere.  Matches the numpy
+merge-tree host path exactly (tested in ``tests/test_batch_sim.py``).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.cache_sim.kernel import cache_sim_scan
+from repro.kernels.cache_sim.ref import cache_sim_ref
+
+__all__ = ["cache_sim_op", "stack_distances_accel"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def cache_sim_op(prev, nxt, occ, *, use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return cache_sim_scan(prev, nxt, occ, interpret=not _on_tpu())
+    return cache_sim_ref(prev, nxt, occ)
+
+
+def stack_distances_accel(prev: np.ndarray, nxt: np.ndarray,
+                          occ: np.ndarray | None = None,
+                          use_kernel: bool | None = None) -> np.ndarray:
+    """int64 stack distances per access, -1 where cold (prev < 0)."""
+    n = prev.shape[0]
+    if occ is None:
+        occ = np.ones(n, dtype=np.int32)
+    counts = np.asarray(cache_sim_op(jnp.asarray(prev, jnp.int32),
+                                     jnp.asarray(nxt, jnp.int32),
+                                     jnp.asarray(occ, jnp.int32),
+                                     use_kernel=use_kernel))
+    out = np.full(n, -1, dtype=np.int64)
+    hot = prev >= 0
+    out[hot] = counts[hot].astype(np.int64)
+    return out

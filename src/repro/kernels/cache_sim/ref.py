@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the occupancy-masked stack-distance kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cache_sim_ref"]
+
+
+def cache_sim_ref(prev: jax.Array, nxt: jax.Array,
+                  occ: jax.Array) -> jax.Array:
+    """counts[i] = #{ j : prev[i] < j < i, occ[j], nxt[j] >= i } (dense O(n²)).
+
+    With ``occ = 1`` everywhere this is the per-access LRU stack distance
+    (the batch-sim hit oracle: resident ⟺ SD < capacity); restricting
+    ``occ`` to reads gives the RO write-around live-distance.
+    """
+    n = prev.shape[0]
+    i_idx = jnp.arange(n)[:, None]
+    j_idx = jnp.arange(n)[None, :]
+    contrib = ((j_idx > prev[:, None]) & (j_idx < i_idx)
+               & (nxt[None, :] >= i_idx) & (occ[None, :] > 0))
+    return jnp.sum(contrib, axis=1).astype(jnp.int32)

@@ -75,10 +75,12 @@ class Trainer:
         while self._current_step() < self.tcfg.total_steps:
             step = self._current_step()
             try:
+                # time from the top of the step: injected faults and input
+                # stalls are exactly what straggler detection must see
+                t0 = time.monotonic()
                 if self.failure_hook is not None:
                     self.failure_hook(step)
                 batch = self.data.batch_at(step)
-                t0 = time.monotonic()
                 self.state, metrics = self.train_step(self.state, batch)
                 jax.block_until_ready(metrics["loss"])
                 dt = time.monotonic() - t0

@@ -1,0 +1,115 @@
+"""Minimal stand-in for ``hypothesis`` when the real package is unavailable.
+
+The test environment for this repo cannot always install third-party
+packages, but the property tests are written against the (tiny) subset of
+the hypothesis API below.  ``tests/conftest.py`` installs this module into
+``sys.modules`` as ``hypothesis`` *only* when the real library is missing —
+with ``pip install -e .[test]`` (see pyproject.toml) the genuine article is
+used and this file is inert.
+
+Semantics: ``@given`` draws ``max_examples`` pseudo-random examples from the
+strategies with a seed derived from the test name (deterministic across
+runs).  There is no shrinking; the failing example is attached to the
+exception instead.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "example_seed"]
+
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+class _Strategy:
+    """A strategy is just a callable drawing one example from an rng."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+    def map(self, f):
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (``st``)."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value,
+                                                      max_value + 1)))
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(min_value
+                              + (max_value - min_value) * rng.random()))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda rng: options[int(rng.integers(len(options)))])
+
+    @staticmethod
+    def just(value) -> _Strategy:
+        return _Strategy(lambda rng: value)
+
+    @staticmethod
+    def tuples(*elems: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng):
+            # Bias toward short lists (like hypothesis) but cover the range.
+            size = int(rng.integers(min_size, max_size + 1))
+            return [elem.example(rng) for _ in range(size)]
+        return _Strategy(draw)
+
+
+def example_seed(name: str) -> int:
+    return zlib.crc32(name.encode())
+
+
+def given(*gargs: _Strategy, **gkwargs: _Strategy):
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(example_seed(fn.__qualname__))
+            for k in range(n):
+                ex_args = tuple(s.example(rng) for s in gargs)
+                ex_kwargs = {key: s.example(rng)
+                             for key, s in gkwargs.items()}
+                try:
+                    fn(*args, *ex_args, **ex_kwargs, **kwargs)
+                except Exception as e:  # noqa: BLE001 - annotate and re-raise
+                    raise AssertionError(
+                        f"falsifying example #{k} for {fn.__name__}: "
+                        f"args={ex_args!r} kwargs={ex_kwargs!r}") from e
+
+        # hide the example parameters from pytest's fixture resolution
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return decorate
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    def decorate(fn):
+        fn._max_examples = int(max_examples)
+        return fn
+    return decorate

@@ -1,0 +1,27 @@
+"""Shared test setup.
+
+Installs the pure-python ``hypothesis`` fallback (tests/_hypothesis_fallback)
+when the real library is not importable, so the property-test modules can be
+collected and run in hermetic environments.  With ``pip install -e .[test]``
+the genuine hypothesis package takes precedence.
+"""
+import importlib.util
+import pathlib
+import sys
+
+
+def _install_hypothesis_fallback() -> None:
+    try:
+        import hypothesis  # noqa: F401
+        return
+    except ImportError:
+        pass
+    path = pathlib.Path(__file__).with_name("_hypothesis_fallback.py")
+    spec = importlib.util.spec_from_file_location("hypothesis", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+
+
+_install_hypothesis_fallback()

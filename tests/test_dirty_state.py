@@ -1,0 +1,98 @@
+"""Dirty-flag bookkeeping on a persistent cache across policy switches.
+
+Regression tests for the ``c_dirty`` leaks: evictions from WT-path inserts
+and RO invalidations previously never popped their shadow entries, so stale
+dirty flags survived across long traces and later windows were overcharged
+``flush_cost``.  The shadow map must mirror residency exactly, under every
+policy-switch sequence the manager can produce.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Trace, WritePolicy, simulate, simulate_batch
+from repro.core.simulator import LRUCache
+
+
+def _tr(pairs):
+    addrs = np.array([a for a, _ in pairs], dtype=np.int64)
+    reads = np.array([r for _, r in pairs], dtype=bool)
+    return Trace(addrs, reads)
+
+
+def _dirty_state(cache):
+    return dict(cache._od)
+
+
+def test_wt_write_leaves_block_clean():
+    """Write-through propagates synchronously: the cached copy is clean,
+    so a later eviction of that block must NOT charge a flush."""
+    c = LRUCache(1)
+    t = _tr([(1, False), (2, True)])   # WT write installs 1; read 2 evicts it
+    r = simulate(t, 1, WritePolicy.WT, flush_cost=100.0, cache=c)
+    assert r.total_latency == pytest.approx(1.2 + 20.0)   # no flush charged
+    assert _dirty_state(c) == {2: False}
+
+
+def test_wt_write_hit_cleans_previously_dirty_block():
+    """WB dirties a block; a WT write to it (policy switched between
+    windows) re-propagates it -> clean; evicting it later is flush-free."""
+    c = LRUCache(1)
+    simulate(_tr([(1, False)]), 1, WritePolicy.WB, flush_cost=100.0, cache=c)
+    assert _dirty_state(c) == {1: True}
+    simulate(_tr([(1, False)]), 1, WritePolicy.WT, flush_cost=100.0, cache=c)
+    assert _dirty_state(c) == {1: False}
+    r = simulate(_tr([(2, True)]), 1, WritePolicy.WT, flush_cost=100.0,
+                 cache=c)
+    assert r.total_latency == pytest.approx(20.0)         # eviction, no flush
+
+
+def test_wt_insert_eviction_pops_and_charges_dirty_block():
+    """A dirty block (from a WB window) evicted by a WT write-miss insert
+    must charge its flush once and drop the shadow entry — not leak it."""
+    c = LRUCache(1)
+    simulate(_tr([(1, False)]), 1, WritePolicy.WB, flush_cost=100.0, cache=c)
+    r = simulate(_tr([(2, False)]), 1, WritePolicy.WT, flush_cost=100.0,
+                 cache=c)
+    assert r.total_latency == pytest.approx(1.2 + 100.0)  # flush exactly once
+    assert _dirty_state(c) == {2: False}
+    # the evicted block's stale flag must not resurface: re-reading 1
+    # (clean install, evicts clean 2) and then 3 (evicts clean 1) charges
+    # two misses and zero flushes
+    r2 = simulate(_tr([(1, True), (3, True)]), 1, WritePolicy.WB,
+                  flush_cost=100.0, cache=c)
+    assert r2.total_latency == pytest.approx(40.0)
+    assert _dirty_state(c) == {3: False}
+
+
+def test_ro_invalidation_pops_dirty_flag():
+    """RO write invalidates a dirty cached copy; when the block is later
+    re-installed clean and evicted, no stale flush may be charged."""
+    c = LRUCache(1)
+    simulate(_tr([(1, False)]), 1, WritePolicy.WB, flush_cost=100.0, cache=c)
+    assert _dirty_state(c) == {1: True}
+    r = simulate(_tr([(1, False)]), 1, WritePolicy.RO, flush_cost=100.0,
+                 cache=c)
+    assert r.write_hits == 1 and len(c) == 0
+    # re-install 1 via read miss, then evict via another read miss
+    r2 = simulate(_tr([(1, True), (2, True)]), 1, WritePolicy.RO,
+                  flush_cost=100.0, cache=c)
+    assert r2.total_latency == pytest.approx(40.0)        # no stale flush
+    assert _dirty_state(c) == {2: False}
+
+
+def test_long_trace_policy_switches_no_leak():
+    """Randomized policy switches on one persistent cache: the shadow map
+    (rebuilt each call from the LRU) must match what the batch engine
+    reconstructs — any stale leak would diverge flush accounting."""
+    rng = np.random.default_rng(7)
+    c1, c2 = LRUCache(6), LRUCache(6)
+    for w in range(12):
+        n = int(rng.integers(1, 40))
+        t = Trace(rng.integers(0, 10, n).astype(np.int64),
+                  rng.random(n) < 0.5)
+        pol = [WritePolicy.WB, WritePolicy.WT, WritePolicy.RO][w % 3]
+        r1 = simulate(t, 6, pol, flush_cost=10.0, cache=c1)
+        r2 = simulate_batch(t, 6, pol, flush_cost=10.0, cache=c2)
+        assert r1.total_latency == pytest.approx(r2.total_latency), w
+        assert r1.cache_writes == r2.cache_writes, w
+        assert list(c1._od.items()) == list(c2._od.items()), w

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.cache_sim.kernel import cache_sim_scan
+from repro.kernels.cache_sim.ref import cache_sim_ref
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.mamba2_ssd.kernel import mamba2_ssd
@@ -12,6 +14,12 @@ from repro.kernels.paged_attention.kernel import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.urd_scan.kernel import urd_scan
 from repro.kernels.urd_scan.ref import urd_scan_ref
+
+# interpret-mode Pallas sweeps are minutes-scale on CPU: tier-1 deselects
+# them (`pytest -m slow` opts in; the jnp oracles are covered by the fast
+# suite through batch_sim/urd property tests).  The cheap ops.py dispatch
+# test below stays un-marked so tier-1 keeps covering the jit wrappers.
+slow_sweep = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 
@@ -29,6 +37,7 @@ def _tol(dtype):
     (1, 2, 256, 256, 64, True, 96),      # sliding window
     (2, 4, 64, 64, 32, True, 0),         # small head dim
 ])
+@slow_sweep
 def test_flash_attention_sweep(B, H, Sq, Skv, D, causal, window, dtype):
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (B, H, Sq, D), dtype)
@@ -47,6 +56,7 @@ def test_flash_attention_sweep(B, H, Sq, Skv, D, causal, window, dtype):
     (3, 8, 8, 128, 32, 3, 16),
     (1, 8, 2, 64, 8, 6, 64),
 ])
+@slow_sweep
 def test_paged_attention_sweep(B, Hq, Hkv, D, page, nps, npool, dtype):
     ks = jax.random.split(KEY, 3)
     rng = np.random.default_rng(0)
@@ -68,6 +78,7 @@ def test_paged_attention_sweep(B, Hq, Hkv, D, page, nps, npool, dtype):
     (4, 256, 64, 128, 64),
     (1, 64, 16, 8, 16),
 ])
+@slow_sweep
 def test_mamba2_ssd_sweep(BH, S, P, N, chunk):
     ks = jax.random.split(KEY, 4)
     x = jax.random.normal(ks[0], (BH, S, P), jnp.float32) * 0.5
@@ -84,6 +95,7 @@ def test_mamba2_ssd_sweep(BH, S, P, N, chunk):
 
 @pytest.mark.parametrize("n,tile", [(64, 16), (100, 32), (512, 128),
                                     (997, 256)])
+@slow_sweep
 def test_urd_scan_sweep(n, tile):
     rng = np.random.default_rng(n)
     addrs = rng.integers(0, max(4, n // 8), size=n).astype(np.int64)
@@ -93,6 +105,25 @@ def test_urd_scan_sweep(n, tile):
                    tile=tile, interpret=True)
     ref = urd_scan_ref(jnp.asarray(prev, jnp.int32),
                        jnp.asarray(nxt, jnp.int32))
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("n,tile", [(64, 16), (100, 32), (257, 64)])
+@pytest.mark.parametrize("occ_mode", ["all", "reads"])
+@slow_sweep
+def test_cache_sim_scan_sweep(n, tile, occ_mode):
+    """Occupancy-masked stack-distance kernel vs jnp oracle (interpret)."""
+    rng = np.random.default_rng(n)
+    addrs = rng.integers(0, max(4, n // 6), size=n).astype(np.int64)
+    from repro.core.trace import prev_next_occurrence
+    prev, nxt = prev_next_occurrence(addrs)
+    occ = (np.ones(n, np.int32) if occ_mode == "all"
+           else (rng.random(n) < 0.6).astype(np.int32))
+    out = cache_sim_scan(jnp.asarray(prev, jnp.int32),
+                         jnp.asarray(nxt, jnp.int32),
+                         jnp.asarray(occ), tile=tile, interpret=True)
+    ref = cache_sim_ref(jnp.asarray(prev, jnp.int32),
+                        jnp.asarray(nxt, jnp.int32), jnp.asarray(occ))
     assert jnp.array_equal(out, ref)
 
 

@@ -10,6 +10,10 @@ from repro.configs import ARCH_IDS, get_config, get_smoke_config, skip_shapes
 from repro.models import model as M
 from repro.models.config import Family, SHAPES
 
+# per-arch smoke forwards/train/decode are minutes-scale on CPU: tier-1
+# deselects them (`pytest -m slow` opts in)
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 B, S = 2, 64
 

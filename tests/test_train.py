@@ -54,6 +54,7 @@ def test_microbatch_equivalence():
                                    rtol=5e-2, atol=5e-3)
 
 
+@pytest.mark.slow
 def test_adamw_dtype_stability():
     cfg, state, step = _setup()
     data = SyntheticLM(cfg.vocab_size, 16, 4, seed=1)
@@ -73,6 +74,7 @@ def test_gradient_clipping():
     assert float(jnp.abs(opt2["mu"]["w"]).max()) < 1.0  # clipped
 
 
+@pytest.mark.slow
 def test_checkpoint_roundtrip_and_restart_determinism():
     cfg, state, step = _setup()
     data = SyntheticLM(cfg.vocab_size, 32, 8, seed=2)
@@ -92,6 +94,7 @@ def test_checkpoint_roundtrip_and_restart_determinism():
                                                  rel=1e-5)
 
 
+@pytest.mark.slow
 def test_trainer_failure_injection_and_recovery():
     cfg, state, step = _setup()
     data = SyntheticLM(cfg.vocab_size, 32, 8, seed=3)
@@ -110,6 +113,7 @@ def test_trainer_failure_injection_and_recovery():
     assert out["final_step"] == 12
 
 
+@pytest.mark.slow
 def test_trainer_straggler_detection():
     import time
     cfg, state, step = _setup()

@@ -66,13 +66,16 @@ class TestPaperFig5:
 @settings(max_examples=200, deadline=None)
 @given(trace_strategy())
 def test_engines_agree_with_brute_force(trace_list):
+    from repro.core import reuse_distances_fast
     t = _mk(trace_list)
     for kind in ("trd", "urd"):
         bf = brute_force_rd(t.addrs, t.is_read, kind)
         fen = reuse_distances(t, kind).distances
         vec = reuse_distances_vectorized(t, kind, tile=16).distances
+        fast = reuse_distances_fast(t, kind).distances
         assert np.array_equal(bf, fen), kind
         assert np.array_equal(bf, vec), kind
+        assert np.array_equal(bf, fast), kind
 
 
 @settings(max_examples=200, deadline=None)
