@@ -1,0 +1,67 @@
+"""ETICA-style single-tier vs two-level comparison (ETICA Fig. 9/10 axes,
+on the Fig.-14 workload mix).
+
+At an *equal L1 (HBM) budget* in the paper's limited-capacity regime, the
+two-level hierarchy adds a managed host-DRAM level (``capacity2``, per-VM
+sizes from the residual Eq.-2 pass, per-level write policies).  Because
+promotions replace miss installs one-for-one, L1 cache writes (the
+endurance metric) must not increase, while every L2 hit converts a
+``t_slow`` miss into a ``t_fast2`` hierarchy hit — so mean latency must
+strictly improve.  Both claims are checked on **both** replay engines
+(``batch`` and ``lru``), plus cross-engine agreement.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_scheme
+
+CAP1 = 2000           # L1-infeasible regime for the mix (URD sum ~6k)
+CAP2 = 8000            # host-DRAM blocks (cheap, bigger than HBM)
+T_FAST2 = 4.0          # host-tier page fetch vs 1.0 HBM / 20.0 recompute
+WINDOWS = 4
+
+
+def _pair(engine: str):
+    one, secs1 = run_scheme("eci", CAP1, windows=WINDOWS, engine=engine)
+    two, secs2 = run_scheme("etica", CAP1, windows=WINDOWS, engine=engine,
+                            capacity2=CAP2, t_fast2=T_FAST2)
+    return one, two, secs1, secs2
+
+
+def main() -> dict:
+    for engine in ("batch", "lru"):        # warm jits/allocators
+        run_scheme("etica", CAP1, windows=1, engine=engine,
+                   capacity2=CAP2, t_fast2=T_FAST2)
+    checks: dict[str, bool] = {}
+    summaries = {}
+    for engine in ("batch", "lru"):
+        one, two, secs1, secs2 = _pair(engine)
+        s1, s2 = one.summary(), two.summary()
+        summaries[engine] = (s1, s2)
+        lat_gain = 1.0 - s2["mean_latency"] / s1["mean_latency"]
+        emit(f"etica_single_tier_{engine}", secs1 / WINDOWS * 1e6,
+             f"lat={s1['mean_latency']:.4f}_hr={s1['read_hit_ratio']:.3f}"
+             f"_l1w={s1['cache_writes']}")
+        emit(f"etica_two_level_{engine}", secs2 / WINDOWS * 1e6,
+             f"lat={s2['mean_latency']:.4f}_hr={s2['read_hit_ratio']:.3f}"
+             f"+{s2['read_hit_ratio_l2']:.3f}_l1w={s2['cache_writes']}"
+             f"_l2w={s2['cache_writes_l2']}")
+        emit(f"etica_latency_gain_{engine}", 0.0, f"{lat_gain:+.1%}")
+        checks[f"latency_improves_{engine}"] = \
+            s2["mean_latency"] < s1["mean_latency"]
+        checks[f"l1_writes_not_increased_{engine}"] = \
+            s2["cache_writes"] <= s1["cache_writes"]
+        checks[f"l2_hits_present_{engine}"] = s2["read_hit_ratio_l2"] > 0.0
+
+    sb, sl = summaries["batch"][1], summaries["lru"][1]
+    checks["engines_agree"] = (
+        sb["cache_writes"] == sl["cache_writes"]
+        and sb["cache_writes_l2"] == sl["cache_writes_l2"]
+        and abs(sb["mean_latency"] - sl["mean_latency"])
+        <= 1e-9 * max(sb["mean_latency"], 1.0))
+    emit("etica_checks", 0.0, ";".join(f"{k}={v}" for k, v in checks.items()))
+    return {"batch": summaries["batch"][1], "single": summaries["batch"][0],
+            "checks": checks}
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,8 @@ import time
 import traceback
 
 from benchmarks import common
-from benchmarks import (bench_appendixA_feasible, bench_fig04_write_policy,
-                        bench_fig10_allocation,
+from benchmarks import (bench_appendixA_feasible, bench_etica_two_level,
+                        bench_fig04_write_policy, bench_fig10_allocation,
                         bench_fig12_policy_assignment,
                         bench_fig14_perf_per_cost, bench_fig16_endurance,
                         bench_serving_cache, bench_table3_urd_overhead)
@@ -26,6 +26,7 @@ BENCHES = [
     ("fig16_endurance", bench_fig16_endurance),
     ("table3_urd_overhead", bench_table3_urd_overhead),
     ("appendixA_feasible", bench_appendixA_feasible),
+    ("etica_two_level", bench_etica_two_level),
     ("serving_cache", bench_serving_cache),
 ]
 

@@ -57,6 +57,10 @@ class BlockPool:
         self.by_key: dict[tuple, int] = {}
         self.stats = {"admitted": 0, "evicted": 0, "reused": 0,
                       "writes": 0}
+        # demote-on-evict hook: called as on_evict(pid, meta) after a page
+        # leaves the pool (TieredKVCache pushes the victim into the managed
+        # host tier — the L2 of the serving hierarchy)
+        self.on_evict = None
 
     # ------------------------------------------------------------ metadata
     def resident(self, tenant: int) -> int:
@@ -112,6 +116,8 @@ class BlockPool:
             self.by_key.pop(m.key, None)
         self.free.append(pid)
         self.stats["evicted"] += 1
+        if self.on_evict is not None:
+            self.on_evict(pid, m)
         return pid
 
     def pin(self, pid: int) -> None:

@@ -3,30 +3,36 @@
 Public API re-exports for the paper's primary contribution.
 """
 from repro.core.baselines import GlobalLRUManager, make_manager
-from repro.core.batch_sim import (reuse_distances_fast, simulate_batch,
+from repro.core.batch_sim import (reuse_distances_fast,
+                                  ro_token_replay_device, simulate_batch,
                                   simulate_many, stack_distances)
 from repro.core.manager import AnalyzerDecision, ECICacheManager, TenantState
 from repro.core.mrc import HitRatioFunction, build_hit_ratio_function
 from repro.core.partitioner import (PartitionResult, aggregate_latency,
-                                    greedy_allocate, pgd_solve)
+                                    greedy_allocate, pgd_solve,
+                                    two_level_solve)
 from repro.core.reuse_distance import (RDResult, max_rd, reuse_distances,
                                        reuse_distances_vectorized,
                                        sampled_reuse_distances,
                                        urd_cache_blocks)
-from repro.core.simulator import LRUCache, SimResult, simulate
+from repro.core.simulator import (LRUCache, SimResult, rebalance_levels,
+                                  simulate)
 from repro.core.trace import (AccessClass, Trace, classify_accesses,
                               request_type_mix, total_cache_writes_wb)
 from repro.core.write_policy import (WritePolicy, assign_write_policy,
-                                     write_ratio)
+                                     assign_write_policy_levels, write_ratio)
 
 __all__ = [
     "AccessClass", "AnalyzerDecision", "ECICacheManager", "GlobalLRUManager",
     "HitRatioFunction", "LRUCache", "PartitionResult", "RDResult", "SimResult",
     "TenantState", "Trace", "WritePolicy", "aggregate_latency",
-    "assign_write_policy", "build_hit_ratio_function", "classify_accesses",
+    "assign_write_policy", "assign_write_policy_levels",
+    "build_hit_ratio_function", "classify_accesses",
     "greedy_allocate", "make_manager", "max_rd", "pgd_solve",
-    "request_type_mix", "reuse_distances", "reuse_distances_fast",
-    "reuse_distances_vectorized", "sampled_reuse_distances", "simulate",
+    "rebalance_levels", "request_type_mix", "reuse_distances",
+    "reuse_distances_fast", "reuse_distances_vectorized",
+    "ro_token_replay_device", "sampled_reuse_distances", "simulate",
     "simulate_batch", "simulate_many", "stack_distances",
-    "total_cache_writes_wb", "urd_cache_blocks", "write_ratio",
+    "total_cache_writes_wb", "two_level_solve", "urd_cache_blocks",
+    "write_ratio",
 ]

@@ -58,8 +58,16 @@ def _reuse_intensity_partition(hs: list[HitRatioFunction], capacity: int,
 
 def make_manager(scheme: str, capacity: int, tenant_names: list[str],
                  **kw) -> ECICacheManager:
-    """Factory for every comparison scheme (same knobs as ECICacheManager)."""
-    if scheme == "eci":
+    """Factory for every comparison scheme (same knobs as ECICacheManager).
+
+    ``etica`` is the two-level configuration of the ECI scheme: pass
+    ``capacity2`` (host-DRAM blocks) and optionally ``t_fast2`` /
+    ``w_threshold2``; each tenant then owns an (L1, L2) hierarchy with
+    per-level URD sizing and per-level write policies.
+    """
+    if scheme in ("eci", "etica"):
+        if scheme == "etica" and int(kw.get("capacity2", 0)) <= 0:
+            raise ValueError("scheme 'etica' needs capacity2 > 0")
         return ECICacheManager(capacity, tenant_names, rd_kind="urd",
                                adaptive_policy=True, **kw)
     if scheme == "centaur":
@@ -117,4 +125,4 @@ class GlobalLRUManager:
         }
 
 
-SCHEMES = ("eci", "centaur", "static", "reuse_intensity", "global")
+SCHEMES = ("eci", "etica", "centaur", "static", "reuse_intensity", "global")

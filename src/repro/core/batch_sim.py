@@ -65,6 +65,32 @@ handled exactly by prepending the cache content as pseudo-read accesses
 (LRU→MRU order) carrying their dirty flags; the prefix is excluded from
 the reported stats.
 
+Two-level hierarchy
+===================
+
+For the exclusive ETICA-style hierarchy (see ``simulator``): every touch
+moves the block to the global MRU and every L1 victim is demoted to L2's
+MRU, so the *union* of both levels is one LRU stack of ``C1 + C2`` blocks
+whose top ``C1`` entries are L1 (after ``rebalance_levels`` restored the
+"L1 full or L2 empty" invariant at window start).  The same ``SD`` array
+therefore classifies each access against **two** thresholds in one pass:
+
+    L1 hit  ⟺  SD < C1        L2 hit  ⟺  C1 <= SD < C1 + C2.
+
+Warm state prepends L2 (LRU→MRU) then L1 (LRU→MRU) — the union stack.
+Demotions (= L2 cache writes) are counted in closed form per tenant:
+``installs_into_L1 − (final_L1 − initial_L1)`` where ``final_L1 =
+min(distinct_addrs, C1)``.  Per-level write policies: ``policy2 != WB``
+keeps L2 *clean* — dirty victims flush at demotion, so the dirty chains
+segment at L1 exits (``SD >= C1``) instead of union exits, and the flush
+eviction test uses the ``C1`` threshold.  Final per-level LRU state is the
+union survivor stack split at depth ``C1``.  RO (write-around) keeps the
+live-count guard, compared per level (``L1-live = live − untouched warm-L2
+blocks``); two-level RO windows under eviction pressure fall back to the
+interpreter (invalidation breaks the stack property — see above), while
+single-level RO pressure keeps the O(n) token loop, which also has a
+``lax.fori_loop`` on-device port (``ro_token_replay_device``).
+
 On TPU the ``SD`` counting runs on-accelerator via the
 ``repro.kernels.cache_sim`` Pallas kernel (the occupancy-masked
 generalization of ``urd_scan``); on CPU the merge-tree host path is used.
@@ -74,7 +100,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.reuse_distance import RDResult
-from repro.core.simulator import LRUCache, SimResult
+from repro.core.simulator import (LRUCache, SimResult, rebalance_levels,
+                                  simulate)
 from repro.core.trace import Trace, prev_next_occurrence
 from repro.core.write_policy import WritePolicy
 
@@ -82,6 +109,7 @@ __all__ = [
     "count_prev_ge",
     "stack_distances",
     "reuse_distances_fast",
+    "ro_token_replay_device",
     "simulate_batch",
     "simulate_many",
 ]
@@ -284,6 +312,96 @@ def _ro_token_replay(is_read_blk: np.ndarray, prev_blk: np.ndarray,
             np.asarray(dirty, dtype=bool), flushes)
 
 
+_RO_DEVICE_JIT = None
+
+
+def _ro_device_core():
+    """Build (and cache) the jitted sequential token-replay loop."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def run(rd, pv, nxt, force, cap):
+        n = rd.shape[0]
+
+        def body(t, carry):
+            death, dirty, fl, res, b = carry
+            p = pv[t]
+            ps = jnp.maximum(p, 0)
+            hit = (p >= 0) & rd[ps] & (death[ps] == t)
+
+            def read_case(c):
+                death, dirty, fl, res, b = c
+
+                def on_hit(c):
+                    death, dirty, fl, res, b = c
+                    return (death, dirty.at[t].set(dirty[ps]), fl, res, b)
+
+                def on_miss(c):
+                    death, dirty, fl, res, b = c
+                    res = res + 1
+
+                    def evict(c):
+                        death, dirty, fl, res, b = c
+                        b = jax.lax.while_loop(
+                            lambda bb: (~rd[bb]) | (death[bb] <= t),
+                            lambda bb: bb + 1, b)
+                        fl = fl + dirty[b].astype(jnp.int32)
+                        return (death.at[b].set(t), dirty, fl, res - 1, b)
+
+                    return jax.lax.cond(res > cap, evict, lambda c: c,
+                                        (death, dirty, fl, res, b))
+
+                return jax.lax.cond(hit, on_hit, on_miss, c)
+
+            def write_case(c):
+                death, dirty, fl, res, b = c
+                return (death, dirty, fl, res - hit.astype(jnp.int32), b)
+
+            return jax.lax.cond(rd[t], read_case, write_case, carry)
+
+        death0 = nxt.astype(jnp.int32)
+        carry = (death0, force, jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        death, dirty, fl, _, _ = jax.lax.fori_loop(0, n, body, carry)
+        return death, dirty, fl
+
+    return run
+
+
+def ro_token_replay_device(is_read_blk: np.ndarray, prev_blk: np.ndarray,
+                           nxt_blk: np.ndarray, force_blk: np.ndarray,
+                           cap: int) -> tuple[np.ndarray, np.ndarray, int]:
+    """``_ro_token_replay`` as a ``lax.fori_loop`` sequential device pass.
+
+    Same token formulation, same outputs (the host loop stays the oracle —
+    equivalence-tested on randomized RO-pressure traces); the whole replay
+    is one fori_loop with an inner while advancing the bottom pointer, so
+    RO tenants under eviction pressure stay on-device on TPU hosts.  Inputs
+    are padded to a multiple of 64 with no-op writes (``prev = -1``) to
+    bound jit retraces across window lengths.
+    """
+    import jax.numpy as jnp
+    global _RO_DEVICE_JIT
+    if _RO_DEVICE_JIT is None:
+        _RO_DEVICE_JIT = _ro_device_core()
+    n = int(is_read_blk.shape[0])
+    if n == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, bool), 0)
+    pad = (-n) % 64
+    rd = np.pad(is_read_blk.astype(bool), (0, pad), constant_values=False)
+    pv = np.pad(prev_blk.astype(np.int32), (0, pad), constant_values=-1)
+    nx = np.pad(nxt_blk.astype(np.int32), (0, pad), constant_values=n + pad)
+    fc = np.pad(force_blk.astype(bool), (0, pad), constant_values=False)
+    death, dirty, fl = _RO_DEVICE_JIT(jnp.asarray(rd), jnp.asarray(pv),
+                                      jnp.asarray(nx), jnp.asarray(fc),
+                                      jnp.int32(cap))
+    death = np.asarray(death)[:n].astype(np.int64)
+    # padded positions never evict, so real token deaths are unaffected,
+    # but clamp natural deaths back to the unpadded horizon
+    death = np.minimum(death, nxt_blk.astype(np.int64))
+    return death, np.asarray(dirty)[:n].astype(bool), int(fl)
+
+
 def _segment_heads(sorted_vals: np.ndarray) -> np.ndarray:
     head = np.ones(sorted_vals.shape[0], dtype=bool)
     head[1:] = sorted_vals[1:] != sorted_vals[:-1]
@@ -295,14 +413,21 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
                   t_write_bypass: float | None = None,
                   flush_cost: float = 0.0,
                   caches: list[LRUCache | None] | None = None,
+                  capacities2=None, policies2=None,
+                  caches2: list[LRUCache | None] | None = None,
+                  t_fast2: float | None = None,
                   return_window_rd: bool = False):
     """Replay one window for every tenant at once (exact, vectorized).
 
     Mirrors ``simulate()`` per tenant: when ``caches[k]`` is given its
     capacity wins over ``capacities[k]``, warm content seeds the replay,
-    and the cache object is left in the exact final LRU state.  RO tenants
-    whose window fails the no-eviction guard (see module docstring) are
-    replayed with the interpreter instead — same results, just slower.
+    and the cache object is left in the exact final LRU state.  The same
+    holds per level: ``capacities2``/``caches2``/``policies2`` describe the
+    second hierarchy level (see the module docstring — both levels are
+    classified against the same stack-distance array).  RO tenants whose
+    window fails the no-eviction guard (see module docstring) are replayed
+    with the token loop (single-level) or the interpreter (two-level)
+    instead — same results, just slower.
 
     With ``return_window_rd=True`` also returns, per tenant, the TRD
     sample array of the *window* trace (``reuse_distances(trace, "trd")``,
@@ -313,27 +438,52 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     """
     if t_write_bypass is None:
         t_write_bypass = 1.2 * t_fast
+    if t_fast2 is None:
+        t_fast2 = 3.0 * t_fast
     T = len(traces)
     caches = caches if caches is not None else [None] * T
+    caches2 = caches2 if caches2 is not None else [None] * T
     if policies is None:
         policies = [WritePolicy.WB] * T
+    if policies2 is None:
+        policies2 = [WritePolicy.WB] * T
     results: list[SimResult | None] = [None] * T
 
+    def run_interp(k: int) -> SimResult:
+        """Exact per-tenant fallback through the stateful interpreter."""
+        return simulate(traces[k], caps1[k], policies[k], t_fast, t_slow,
+                        t_write_bypass=t_write_bypass, flush_cost=flush_cost,
+                        cache=caches[k], capacity2=caps2[k],
+                        policy2=policies2[k], t_fast2=t_fast2,
+                        cache2=caches2[k])
+
     vec: list[int] = []
+    caps1 = [0] * T
+    caps2 = [0] * T
     for k in range(T):
-        tr, c = traces[k], caches[k]
+        tr, c, c2 = traces[k], caches[k], caches2[k]
         cap = int(c.capacity if c is not None else capacities[k])
+        cap2 = int(c2.capacity if c2 is not None else
+                   (capacities2[k] if capacities2 is not None else 0))
+        caps1[k], caps2[k] = cap, cap2
         pol = policies[k]
+        two = cap2 > 0 or (c2 is not None and len(c2) > 0)
         n = len(tr)
         if n == 0:
-            results[k] = SimResult(capacity=cap, policy=pol.value)
+            if two:                  # rebalance/flush side effects still run
+                results[k] = run_interp(k)
+            else:
+                results[k] = SimResult(capacity=cap, policy=pol.value)
             continue
-        if cap <= 0:
+        if cap <= 0 and not two:
             r = SimResult(capacity=cap, policy=pol.value)
             r.reads = int(np.sum(tr.is_read))
             r.writes = n - r.reads
             r.total_latency = r.reads * t_slow + r.writes * t_write_bypass
             results[k] = r
+            continue
+        if two and cap2 <= 0:        # degenerate warm L2 behind a dead level
+            results[k] = run_interp(k)
             continue
         vec.append(k)
 
@@ -341,28 +491,42 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     if not vec:
         return (results, rds) if return_window_rd else results
 
+    # restore the hierarchy invariant before reading warm state (both
+    # engines normalize identically — see simulator.rebalance_levels)
+    for k in vec:
+        c, c2 = caches[k], caches2[k]
+        if c is not None and c2 is not None and len(c2) > 0:
+            rebalance_levels(c, c2)
+
     # ------------------------------------------------------ build the tape
-    # one contiguous block per tenant: [warm prefix (pseudo-reads carrying
-    # dirty flags, LRU -> MRU)] + [window accesses]; address ids remapped
-    # per tenant so blocks never interact.
+    # one contiguous block per tenant: [warm L2 prefix][warm L1 prefix]
+    # (pseudo-reads carrying dirty flags, each LRU -> MRU: the union stack)
+    # + [window accesses]; address ids remapped per tenant so blocks never
+    # interact.
     parts_addr, parts_read, parts_force = [], [], []
-    starts, bodies, ends = [], [], []
+    starts, l2_ends, bodies, ends = [], [], [], []
     off = 0
     for k in vec:
-        tr, c = traces[k], caches[k]
+        tr, c, c2 = traces[k], caches[k], caches2[k]
+        if c2 is not None and len(c2) > 0:
+            paddrs2, pdirty2 = c2.state_arrays()
+        else:
+            paddrs2 = np.zeros(0, np.int64)
+            pdirty2 = np.zeros(0, bool)
         if c is not None and len(c) > 0:
             paddrs, pdirty = c.state_arrays()
         else:
             paddrs = np.zeros(0, np.int64)
             pdirty = np.zeros(0, bool)
-        parts_addr.append(np.concatenate([paddrs, tr.addrs]))
+        parts_addr.append(np.concatenate([paddrs2, paddrs, tr.addrs]))
         parts_read.append(np.concatenate(
-            [np.ones(paddrs.size, bool), tr.is_read]))
+            [np.ones(paddrs2.size + paddrs.size, bool), tr.is_read]))
         parts_force.append(np.concatenate(
-            [pdirty, np.zeros(len(tr), bool)]))
+            [pdirty2, pdirty, np.zeros(len(tr), bool)]))
         starts.append(off)
-        bodies.append(off + paddrs.size)
-        off += paddrs.size + len(tr)
+        l2_ends.append(off + paddrs2.size)
+        bodies.append(off + paddrs2.size + paddrs.size)
+        off += paddrs2.size + paddrs.size + len(tr)
         ends.append(off)
 
     orig_addr = np.concatenate(parts_addr)
@@ -371,15 +535,27 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     m = off
     pos = np.arange(m, dtype=np.int64)
     starts_a = np.array(starts, np.int64)
+    l2_ends_a = np.array(l2_ends, np.int64)
     bodies_a = np.array(bodies, np.int64)
     ends_a = np.array(ends, np.int64)
     lens = ends_a - starts_a
     tid = np.repeat(np.arange(len(vec), dtype=np.int64), lens)
-    cap_of = np.repeat(np.array(
-        [caches[k].capacity if caches[k] is not None else int(capacities[k])
-         for k in vec], np.int64), lens)
+    cap1_arr = np.array([caps1[k] for k in vec], np.int64)
+    cap2_arr = np.array([caps2[k] for k in vec], np.int64)
+    captot_arr = cap1_arr + cap2_arr
+    cap1_of = np.repeat(cap1_arr, lens)
+    captot_of = np.repeat(captot_arr, lens)
     pol_codes = np.array([{"wb": 0, "wt": 1, "ro": 2}[policies[k].value]
                           for k in vec], np.int64)
+    clean2_arr = np.array([policies2[k] is not WritePolicy.WB
+                           and caps2[k] > 0 and caps1[k] > 0 for k in vec],
+                          bool)
+    clean2_of = np.repeat(clean2_arr, lens)
+    # hit-level boundary: hits whose previous occurrence precedes it are L2
+    # hits (RO path); when L1 has no capacity the only level *is* L2
+    l2b_arr = np.where(cap1_arr > 0, l2_ends_a, m)
+    l2b_of = np.repeat(l2b_arr, lens)
+    l2end_of = np.repeat(l2_ends_a, lens)       # true warm-L2 boundary
     pol_of = np.repeat(pol_codes, lens)
     end_of = np.repeat(ends_a, lens)
     counted = pos >= np.repeat(bodies_a, lens)
@@ -404,35 +580,65 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     nxt_c = np.minimum(nxt, end_of)
 
     # --------------------------------------- RO residency: guard or tokens
-    # L[t] = live blocks after access t assuming no eviction.  While
-    # L <= C the cache can never have filled, so no eviction has occurred
-    # and resident ⟺ live is exact.  Tenants whose window exceeds that
-    # bound are replayed by the O(n) eviction-token loop instead
-    # (``_ro_token_replay``) — still exact, still loop-free afterwards:
-    # the loop only shortens token deaths, and hits are recovered as
-    # ``death[prev] == i``.
+    # L[t] = live blocks after access t assuming no eviction; for a real
+    # L1 level subtract U2[t] = still-untouched warm-L2 blocks (they live
+    # in L2, not L1).  While L1-live <= C1 the level can never have filled,
+    # so no eviction/demotion has occurred and resident ⟺ live is exact.
+    # Single-level tenants (C2 == 0, or C1 == 0 where L2 *is* the level)
+    # exceeding the bound are replayed by the O(n) eviction-token loop
+    # (``_ro_token_replay`` / its fori_loop device port) — still exact,
+    # still loop-free afterwards: the loop only shortens token deaths, and
+    # hits are recovered as ``death[prev] == i``.  Two-level RO windows
+    # under pressure fall back to the interpreter (invalidation breaks the
+    # stack property, and the token formulation is single-level).
     tokens: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
+    fallback: set[int] = set()
     if np.any(pol_codes == 2):
         occ_idx = np.flatnonzero(is_read)
         d = (np.bincount(occ_idx, minlength=m + 1)
              - np.bincount(nxt_c[occ_idx], minlength=m + 1))
         L = np.cumsum(d[:m])
+        w2 = np.flatnonzero(pos < l2end_of)      # warm-L2 pseudo positions
+        if w2.size:
+            du = (np.bincount(w2, minlength=m + 1)
+                  - np.bincount(nxt_c[w2], minlength=m + 1))
+            U2 = np.cumsum(du[:m])
+        else:
+            U2 = None
+        token_replay = (ro_token_replay_device if _accel_default()
+                        else _ro_token_replay)
         for t, k in enumerate(vec):
             if pol_codes[t] != 2:
                 continue
             s, e = starts[t], ends[t]
-            if int(L[s:e].max()) > int(cap_of[s]):
-                tokens[t] = _ro_token_replay(
-                    is_read[s:e], prev[s:e] - s, nxt_c[s:e] - s,
-                    force_dirty[s:e], int(cap_of[s]))
+            cap1, cap2 = int(cap1_arr[t]), int(cap2_arr[t])
+            ro_cap = cap1 if cap1 > 0 else cap1 + cap2
+            lt = L[s:e]
+            if U2 is not None and cap1 > 0 and cap2 > 0:
+                lt = lt - U2[s:e]
+            if int(lt.max()) > ro_cap:
+                if cap1 > 0 and cap2 > 0:
+                    fallback.add(t)
+                    results[k] = run_interp(k)
+                else:
+                    tokens[t] = token_replay(
+                        is_read[s:e], prev[s:e] - s, nxt_c[s:e] - s,
+                        force_dirty[s:e], ro_cap)
 
     # -------------------------------------------------- residency oracle
     # (the kernel's counting window (prev[i], i) never crosses a tenant
     # block for hot accesses and cold rows are masked, so the whole tape
     # goes through one kernel launch on TPU)
+    sd = level_masks = None
     if _accel_default():
-        from repro.kernels.cache_sim.ops import stack_distances_accel
-        sd = stack_distances_accel(prev, nxt_c)
+        from repro.kernels.cache_sim.ops import (residency_levels_accel,
+                                                 stack_distances_accel)
+        if return_window_rd:
+            sd = stack_distances_accel(prev, nxt_c)
+        else:
+            # both-level residency straight off the kernel, one launch
+            level_masks = residency_levels_accel(prev, nxt_c,
+                                                 cap1_of, captot_of)
     else:
         sd = _stack_distances_host(prev, nxt_c,
                                    bounds=np.concatenate([starts_a, [m]]))
@@ -444,9 +650,13 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
             rds[k] = np.where(prev[sl] >= bodies_a[t], sd[sl], -1)
     hot = prev >= 0
     prev_safe = np.maximum(prev, 0)
-    res_wbwt = hot & (sd < cap_of) & (sd >= 0)
+    if level_masks is not None:
+        res_l1_sd, res_un_sd = level_masks
+    else:
+        res_l1_sd = hot & (sd < cap1_of) & (sd >= 0)
+        res_un_sd = hot & (sd < captot_of) & (sd >= 0)
     res_ro = hot & is_read[prev_safe]
-    resident = np.where(pol_of == 2, res_ro, res_wbwt)
+    resident = np.where(pol_of == 2, res_ro, res_un_sd)
     for t, (death, _, _) in tokens.items():
         s, e = starts[t], ends[t]
         pl = prev[s:e] - s
@@ -454,16 +664,39 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
         blk_read = is_read[s:e]
         resident[s:e] = ((pl >= 0) & blk_read[pls]
                          & (death[pls] == np.arange(e - s)))
+    # split hits by level: WB/WT against the two stack thresholds, RO by
+    # whether the previous occurrence is a still-untouched warm-L2 block
+    res_l2 = np.where(pol_of == 2,
+                      resident & (prev_safe < l2b_of),
+                      resident & ~res_l1_sd)
+    res_l1 = resident & ~res_l2
+
+    # clean-L2 policies flush any warm dirty L2 content up-front (the
+    # interpreter does the same); the tape forgets those flags so dirty
+    # chains and final state see a clean L2
+    flush_pre = np.zeros(len(vec), np.int64)
+    if force_dirty.any():
+        for t, k in enumerate(vec):
+            if t in fallback or not clean2_arr[t]:
+                continue
+            sl = slice(starts[t], l2_ends[t])
+            nd = int(np.sum(force_dirty[sl]))
+            if nd:
+                flush_pre[t] = nd
+                force_dirty[sl] = False
 
     # ------------------------------------------------------- dirty chains
-    # group by address, segment at installs (non-resident accesses); the
-    # dirty flag after each access is a segmented reduction:
+    # group by address, segment at installs (non-resident accesses — for a
+    # clean L2 the chain instead segments at L1 exits, since demotion
+    # flushes the block and it re-promotes clean); the dirty flag after
+    # each access is a segmented reduction:
     #   WB       : OR of (is_write | forced) over the period so far
     #   WT / RO  : forced flag at the period head, cleared by any write
     #              (WT write-through propagates -> cached copy is clean;
     #               RO writes invalidate, the flag only matters for warm
     #               prefix blocks)
-    head = _segment_heads(sorted_vals) | ~resident[ordi]
+    chain_res = np.where(clean2_of & (pol_of != 2), res_l1, resident)
+    head = _segment_heads(sorted_vals) | ~chain_res[ordi]
     head[starts_a] = True                        # sever cross-block ties
     head_pos = np.maximum.accumulate(np.where(head, np.arange(m), -1))
     any_force = bool(force_dirty.any())
@@ -487,61 +720,101 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     # an eviction displaces the block last touched at j iff its next
     # occurrence misses, or (no next occurrence) >= C distinct addresses
     # follow it; dirty evictions charge flush_cost (WB/WT only: RO fast
-    # path proved no evictions happen).
+    # path proved no evictions happen).  With a dirty-accepting L2 the
+    # flush happens at the *union* eviction; with a clean L2 it happens at
+    # the L1 exit (demotion) instead — same machinery, C1 threshold.
     last = nxt_c == end_of
     cl = np.cumsum(last.astype(np.int64))
     D = cl[end_of - 1] - cl
     if flush_cost > 0.0:
+        flushcap_of = np.where(clean2_of & (pol_of != 2),
+                               cap1_of, captot_of)
         miss_next = np.zeros(m, dtype=bool)
         nz = ~last
-        miss_next[nz] = ~resident[nxt_c[nz]]
-        evicted = np.where(last, D >= cap_of, miss_next)
+        miss_next[nz] = ~chain_res[nxt_c[nz]]
+        evicted = np.where(last, D >= flushcap_of, miss_next)
         flush_ev = dirty_after & evicted & (pol_of != 2)
         flush_per = np.bincount(tid[flush_ev], minlength=len(vec))
     else:
         flush_per = np.zeros(len(vec), np.int64)
+    flush_per += flush_pre
     for t, (_, _, fl) in tokens.items():         # RO evictions under pressure
         flush_per[t] += fl
 
     # ------------------------------------------------------- per-tenant stats
-    # one fused bincount: code = 4*tenant + 2*is_read + resident
-    code = tid * 4 + (is_read.astype(np.int64) * 2
-                      + resident.astype(np.int64))
-    cnts = np.bincount(code[counted], minlength=4 * len(vec)) \
-        .reshape(len(vec), 4)
-    reads_per = cnts[:, 2] + cnts[:, 3]
-    rhits_per = cnts[:, 3]
-    writes_per = cnts[:, 0] + cnts[:, 1]
-    whits_per = cnts[:, 1]
+    # one fused bincount: code = 8*tenant + 4*is_read + level
+    # (level: 0 = miss, 1 = L2 hit, 2 = L1 hit)
+    lvl = res_l1.astype(np.int64) * 2 + res_l2.astype(np.int64)
+    code = tid * 8 + is_read.astype(np.int64) * 4 + lvl
+    cnts = np.bincount(code[counted], minlength=8 * len(vec)) \
+        .reshape(len(vec), 8)
+    reads_per = cnts[:, 4] + cnts[:, 5] + cnts[:, 6]
+    rhits_per = cnts[:, 6]
+    rhits2_per = cnts[:, 5]
+    writes_per = cnts[:, 0] + cnts[:, 1] + cnts[:, 2]
+    whits_per = cnts[:, 2]
+    whits2_per = cnts[:, 1]
+    # distinct union addresses per tenant block -> closed-form demotions
+    U_per = np.bincount(tid[last], minlength=len(vec))
 
     for t, k in enumerate(vec):
+        if t in fallback:
+            continue                             # interpreter already ran
         pol = policies[k]
-        cap = int(cap_of[starts[t]])
-        r = SimResult(capacity=cap, policy=pol.value)
+        cap1, cap2 = int(cap1_arr[t]), int(cap2_arr[t])
+        captot = cap1 + cap2
+        r = SimResult(capacity=cap1, policy=pol.value, capacity2=cap2,
+                      policy2=(policies2[k].value if cap2 > 0 else "wb"))
         r.reads = int(reads_per[t])
         r.read_hits = int(rhits_per[t])
+        r.read_hits_l2 = int(rhits2_per[t])
         r.writes = int(writes_per[t])
         r.write_hits = int(whits_per[t])
-        rmiss = r.reads - r.read_hits
+        r.write_hits_l2 = int(whits2_per[t])
+        l2h = r.read_hits_l2
+        rmiss = r.reads - r.read_hits - l2h
         fl = int(flush_per[t])
         if pol is WritePolicy.WB:
-            r.cache_writes = rmiss + r.writes
-            r.total_latency = (r.read_hits * t_fast + rmiss * t_slow
-                               + r.writes * t_fast + fl * flush_cost)
+            if cap1 > 0:
+                r.cache_writes = rmiss + l2h + r.writes
+                r.total_latency = (r.read_hits * t_fast + rmiss * t_slow
+                                   + r.writes * t_fast + fl * flush_cost)
+            elif captot > 0:
+                r.cache_writes_l2 = rmiss + r.writes
+                r.total_latency = (rmiss * t_slow + r.writes * t_fast2
+                                   + fl * flush_cost)
+            else:
+                r.total_latency = (rmiss * t_slow
+                                   + r.writes * t_write_bypass)
         elif pol is WritePolicy.WT:
-            r.cache_writes = rmiss + r.writes
+            if cap1 > 0:
+                r.cache_writes = rmiss + l2h + r.writes
+            elif captot > 0:
+                r.cache_writes_l2 = rmiss + r.writes
             r.total_latency = (r.read_hits * t_fast + rmiss * t_slow
                                + r.writes * t_write_bypass
                                + fl * flush_cost)
         else:
-            r.cache_writes = rmiss
+            if cap1 > 0:
+                r.cache_writes = rmiss + l2h
+            elif captot > 0:
+                r.cache_writes_l2 = rmiss
             r.total_latency = (r.read_hits * t_fast + rmiss * t_slow
                                + r.writes * t_write_bypass
                                + fl * flush_cost)
+        if l2h:
+            r.total_latency += l2h * t_fast2
+        if cap1 > 0 and cap2 > 0 and pol is not WritePolicy.RO:
+            # every install into a full L1 demotes its victim into L2
+            installs = (r.reads - r.read_hits) + (r.writes - r.write_hits)
+            final_l1 = min(int(U_per[t]), cap1)
+            init_l1 = int(bodies_a[t] - l2_ends_a[t])
+            r.cache_writes_l2 = installs - (final_l1 - init_l1)
 
         # ------------------------------------------- final LRU state
         c = caches[k]
-        if c is not None:
+        c2v = caches2[k]
+        if c is not None or c2v is not None:
             sl = slice(starts[t], ends[t])
             if t in tokens:
                 death, tdirty, _ = tokens[t]
@@ -552,10 +825,28 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
                 if pol is WritePolicy.RO:
                     keep = blk_last & is_read[sl]
                 else:
-                    keep = blk_last & (D[sl] < cap)
+                    keep = blk_last & (D[sl] < captot)
                 dirty_keep = dirty_after[starts[t]:ends[t]][keep]
             js = np.flatnonzero(keep) + starts[t]       # ascending = LRU->MRU
-            c.set_state_arrays(orig_addr[js], dirty_keep)
+            if cap2 <= 0 and (c2v is None or len(c2v) == 0):
+                if c is not None:
+                    c.set_state_arrays(orig_addr[js], dirty_keep)
+            else:
+                # split the union survivor stack at depth C1 (WB/WT), or by
+                # warm-L2 pseudo position (RO: untouched blocks stay in L2)
+                if pol is WritePolicy.RO:
+                    in_l2 = js < int(l2b_arr[t])
+                else:
+                    n1 = min(cap1, js.size)
+                    in_l2 = np.arange(js.size) < js.size - n1
+                if c is not None:
+                    c.set_state_arrays(orig_addr[js[~in_l2]],
+                                       dirty_keep[~in_l2])
+                if c2v is not None:
+                    d2k = dirty_keep[in_l2]
+                    if clean2_arr[t]:
+                        d2k = np.zeros(d2k.size, bool)
+                    c2v.set_state_arrays(orig_addr[js[in_l2]], d2k)
         results[k] = r
     return (results, rds) if return_window_rd else results
 
@@ -565,8 +856,14 @@ def simulate_batch(trace: Trace, capacity: int,
                    t_fast: float = 1.0, t_slow: float = 20.0,
                    t_write_bypass: float | None = None,
                    flush_cost: float = 0.0,
-                   cache: LRUCache | None = None) -> SimResult:
+                   cache: LRUCache | None = None, *,
+                   capacity2: int = 0,
+                   policy2: WritePolicy = WritePolicy.WB,
+                   t_fast2: float | None = None,
+                   cache2: LRUCache | None = None) -> SimResult:
     """Drop-in vectorized replacement for ``simulator.simulate``."""
     return simulate_many([trace], [capacity], [policy], t_fast=t_fast,
                          t_slow=t_slow, t_write_bypass=t_write_bypass,
-                         flush_cost=flush_cost, caches=[cache])[0]
+                         flush_cost=flush_cost, caches=[cache],
+                         capacities2=[capacity2], policies2=[policy2],
+                         caches2=[cache2], t_fast2=t_fast2)[0]

@@ -17,6 +17,7 @@ serving engine (see ``repro.cache.tiered`` which feeds events back here).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Callable
 
@@ -25,13 +26,13 @@ import numpy as np
 from repro.core.batch_sim import reuse_distances_fast, simulate_many
 from repro.core.mrc import HitRatioFunction, build_hit_ratio_function
 from repro.core.partitioner import (PartitionResult, greedy_allocate,
-                                    pgd_solve)
+                                    pgd_solve, two_level_solve)
 from repro.core.reuse_distance import (RDResult, reuse_distances,
                                        sampled_reuse_distances,
                                        urd_cache_blocks)
 from repro.core.simulator import LRUCache, SimResult, simulate
 from repro.core.trace import Trace
-from repro.core.write_policy import WritePolicy, assign_write_policy
+from repro.core.write_policy import WritePolicy, write_ratio
 
 __all__ = ["TenantState", "AnalyzerDecision", "ECICacheManager"]
 
@@ -47,6 +48,10 @@ class TenantState:
     window_reads: list[np.ndarray] = dataclasses.field(default_factory=list)
     result: SimResult = dataclasses.field(default_factory=SimResult)
     active: bool = True                         # finished tenants are excluded
+    # second hierarchy level (ETICA): host-DRAM partition + its policy
+    cache2: LRUCache = dataclasses.field(
+        default_factory=lambda: LRUCache(0))
+    policy2: WritePolicy = WritePolicy.WB
 
     def window_trace(self) -> Trace:
         if not self.window_addrs:
@@ -65,6 +70,10 @@ class AnalyzerDecision:
     policies: list[WritePolicy]
     feasible: bool
     partition: PartitionResult
+    # per-level extension (all None/zeros for a single-level manager)
+    sizes2: np.ndarray | None = None
+    policies2: list[WritePolicy] | None = None
+    partition2: PartitionResult | None = None
 
 
 class ECICacheManager:
@@ -83,6 +92,20 @@ class ECICacheManager:
     engine (``repro.core.batch_sim``, exact — the Analyzer additionally
     reuses its counting pass for the reuse distances), ``"lru"`` the
     stateful per-access interpreter.  Both produce identical results.
+
+    ``capacity2 > 0`` turns the managed partitions into ETICA-style
+    two-level hierarchies: each tenant owns an L1 (HBM) *and* an L2
+    (host-DRAM) LRU partition, the Analyzer sizes both levels
+    (``two_level_solve``: the level-2 Eq. 2 runs on the residual hit-ratio
+    curves with service time ``t_fast2``) and assigns a per-level write
+    policy (Alg. 3 at ``w_threshold`` for L1, the stricter ``w_threshold2``
+    for L2 — a clean L2 flushes dirty victims at demotion).  With the
+    default ``capacity2 == 0`` everything reduces bit-identically to the
+    single-level scheme.
+
+    ``history_limit`` bounds the retained ``AnalyzerDecision`` list (a
+    long-running serving deployment analyzes every Δt forever; unbounded
+    history is a leak).  ``None`` keeps everything.
     """
 
     def __init__(self, capacity: int, tenant_names: list[str],
@@ -94,13 +117,19 @@ class ECICacheManager:
                  initial_blocks: int | None = None,
                  percentile: float = 100.0,
                  partition_fn: Callable = pgd_solve,
-                 engine: str = "batch"):
+                 engine: str = "batch",
+                 capacity2: int = 0, t_fast2: float | None = None,
+                 w_threshold2: float = 0.3,
+                 history_limit: int | None = 256):
         if engine not in ("batch", "lru"):
             raise ValueError(f"engine must be 'batch' or 'lru', got {engine!r}")
         self.capacity = int(capacity)
+        self.capacity2 = int(capacity2)
         self.c_min = int(c_min)
         self.w_threshold = float(w_threshold)
+        self.w_threshold2 = float(w_threshold2)
         self.t_fast, self.t_slow = float(t_fast), float(t_slow)
+        self.t_fast2 = (3.0 * t_fast if t_fast2 is None else float(t_fast2))
         self.t_write_bypass = (1.2 * t_fast if t_write_bypass is None
                                else float(t_write_bypass))
         self.flush_cost = float(flush_cost)
@@ -112,7 +141,8 @@ class ECICacheManager:
         self.engine = engine
         init = int(initial_blocks if initial_blocks is not None else c_min)
         self.tenants = [TenantState(n, LRUCache(init)) for n in tenant_names]
-        self.history: list[AnalyzerDecision] = []
+        self.history: collections.deque[AnalyzerDecision] = \
+            collections.deque(maxlen=history_limit)
 
     # ------------------------------------------------------------- Monitor
     def record(self, tenant: int, addrs: np.ndarray, is_read: np.ndarray) -> None:
@@ -121,10 +151,11 @@ class ECICacheManager:
         t.window_reads.append(np.asarray(is_read, bool))
 
     def retire_tenant(self, tenant: int) -> None:
-        """Workload finished: release its partition (paper §6.3)."""
+        """Workload finished: release its partitions (paper §6.3)."""
         t = self.tenants[tenant]
         t.active = False
         t.cache.resize(0)
+        t.cache2.resize(0)
 
     # ------------------------------------------------------------ Analyzer
     def _rd(self, trace: Trace) -> RDResult:
@@ -142,7 +173,6 @@ class ECICacheManager:
         re-deriving distances from scratch.
         """
         window_trd = window_trd or {}
-        active = [t for t in self.tenants if t.active]
         hs: list[HitRatioFunction] = []
         for i, t in enumerate(self.tenants):
             if not t.active:
@@ -168,29 +198,47 @@ class ECICacheManager:
                     t.policy = (WritePolicy.RO if wr >= self.w_threshold
                                 else WritePolicy.WB)
                 else:
-                    t.policy = assign_write_policy(tr, self.w_threshold)
+                    wr = write_ratio(tr)
+                    t.policy = (WritePolicy.RO if wr >= self.w_threshold
+                                else WritePolicy.WB)
+                if self.capacity2 > 0:
+                    # per-level Alg. 3: the larger endurance-sensitive L2
+                    # switches to the clean policy at a stricter threshold
+                    t.policy2 = (WritePolicy.RO if wr >= self.w_threshold2
+                                 else WritePolicy.WB)
 
-        part = self.partition_fn(hs, self.capacity, self.t_fast, self.t_slow,
-                                 c_min=self.c_min)
-        policies = [t.policy for t in active]
+        part, part2 = two_level_solve(
+            hs, self.capacity, self.capacity2, self.t_fast, self.t_fast2,
+            self.t_slow, c_min=self.c_min, partition_fn=self.partition_fn)
 
         sizes_full = np.zeros(len(self.tenants), dtype=np.int64)
+        sizes2_full = np.zeros(len(self.tenants), dtype=np.int64)
         k = 0
         for i, t in enumerate(self.tenants):
             if t.active:
                 sizes_full[i] = part.sizes[k]
+                if part2 is not None:
+                    sizes2_full[i] = part2.sizes[k]
                 k += 1
         decision = AnalyzerDecision(sizes_full,
                                     [t.policy for t in self.tenants],
-                                    part.feasible, part)
+                                    part.feasible, part,
+                                    sizes2=sizes2_full,
+                                    policies2=[t.policy2
+                                               for t in self.tenants],
+                                    partition2=part2)
         self.history.append(decision)
         return decision
 
     # ------------------------------------------------------------ Actuator
     def actuate(self, decision: AnalyzerDecision) -> None:
-        for t, size in zip(self.tenants, decision.sizes):
+        sizes2 = (decision.sizes2 if decision.sizes2 is not None
+                  else np.zeros(len(self.tenants), np.int64))
+        for t, size, size2 in zip(self.tenants, decision.sizes, sizes2):
             if t.active:
                 t.cache.resize(int(size))
+                if self.capacity2 > 0 or t.cache2.capacity > 0:
+                    t.cache2.resize(int(size2))
                 t.clear_window()
 
     # --------------------------------------------------------- trace replay
@@ -200,8 +248,13 @@ class ECICacheManager:
         agg.writes += res.writes; agg.write_hits += res.write_hits
         agg.cache_writes += res.cache_writes
         agg.total_latency += res.total_latency
+        agg.read_hits_l2 += res.read_hits_l2
+        agg.write_hits_l2 += res.write_hits_l2
+        agg.cache_writes_l2 += res.cache_writes_l2
         agg.capacity = t.cache.capacity
+        agg.capacity2 = t.cache2.capacity
         agg.policy = t.policy.value
+        agg.policy2 = t.policy2.value
 
     def run_window(self, traces: list[Trace | None],
                    engine: str | None = None) -> None:
@@ -227,6 +280,9 @@ class ECICacheManager:
                 t_write_bypass=self.t_write_bypass,
                 flush_cost=self.flush_cost,
                 caches=[self.tenants[i].cache for i in idx],
+                policies2=[self.tenants[i].policy2 for i in idx],
+                caches2=[self.tenants[i].cache2 for i in idx],
+                t_fast2=self.t_fast2,
                 return_window_rd=True)
             window_trd = {i: rd for i, rd in zip(idx, rds) if rd is not None}
             for i, res in zip(idx, results):
@@ -237,7 +293,9 @@ class ECICacheManager:
                 res = simulate(traces[i], t.cache.capacity, t.policy,
                                self.t_fast, self.t_slow,
                                t_write_bypass=self.t_write_bypass,
-                               flush_cost=self.flush_cost, cache=t.cache)
+                               flush_cost=self.flush_cost, cache=t.cache,
+                               capacity2=t.cache2.capacity, policy2=t.policy2,
+                               t_fast2=self.t_fast2, cache2=t.cache2)
                 self._accumulate(t, res)
         decision = self.analyze(window_trd)
         self.actuate(decision)
@@ -245,6 +303,9 @@ class ECICacheManager:
     # ------------------------------------------------------------- metrics
     def allocated_sizes(self) -> np.ndarray:
         return np.array([t.cache.capacity for t in self.tenants], np.int64)
+
+    def allocated_sizes2(self) -> np.ndarray:
+        return np.array([t.cache2.capacity for t in self.tenants], np.int64)
 
     def summary(self) -> dict[str, float]:
         res = [t.result for t in self.tenants]
@@ -262,4 +323,8 @@ class ECICacheManager:
             "perf_per_cost": (1.0 / mean_lat) / alloc if mean_lat and alloc else 0.0,
             "read_hit_ratio": (sum(r.read_hits for r in res)
                                / max(sum(r.reads for r in res), 1)),
+            "cache_writes_l2": sum(r.cache_writes_l2 for r in res),
+            "allocated_blocks_l2": int(self.allocated_sizes2().sum()),
+            "read_hit_ratio_l2": (sum(r.read_hits_l2 for r in res)
+                                  / max(sum(r.reads for r in res), 1)),
         }

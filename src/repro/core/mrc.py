@@ -74,6 +74,24 @@ class HitRatioFunction:
         cur = self(c)
         return nxt, float(self.heights[min(k, len(self.heights) - 1)] - cur)
 
+    def shifted(self, base: int) -> "HitRatioFunction":
+        """Residual curve ``h~(c) = h(base + c) − h(base)``: level-2 input.
+
+        For the exclusive two-level hierarchy the union behaves as one LRU
+        stack, so with ``base`` L1 blocks already granted, ``c`` additional
+        L2 blocks convert exactly the accesses with reuse distance in
+        ``[base, base + c)`` into L2 hits.  The baseline ``h(base)`` (mass
+        already captured by L1) is subtracted so the curve starts at 0 and
+        marginal gains/densities are the true level-2 gains; the dropped
+        constant does not affect the Eq.-2 argmax.  ``shifted(0) == self``.
+        """
+        base = max(int(base), 0)
+        k = int(np.searchsorted(self.edges, base, side="right"))
+        h0 = float(self(base)) if base > 0 else float(self.heights[0])
+        edges = np.concatenate([[0], self.edges[k:] - base]).astype(np.int64)
+        heights = np.concatenate([[0.0], self.heights[k:] - h0])
+        return HitRatioFunction(edges, heights, self.n_accesses)
+
 
 def build_hit_ratio_function(rd: RDResult, n_accesses: int | None = None,
                              max_size: int | None = None) -> HitRatioFunction:

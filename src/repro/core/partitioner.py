@@ -19,6 +19,13 @@ hit-ratio functions.  We provide:
     it matches greedy within the relaxation gap.
 
 Both return allocations in *blocks* (pages).
+
+``two_level_solve`` adds ETICA's second capacity constraint: level 1
+(HBM blocks) is sized by the single-level problem, then level 2 (host-DRAM
+blocks) solves the *same* Eq. 2 on the residual hit-ratio curves
+``h~_i(c) = h_i(c1_i + c)`` with service time ``t_fast2`` — exact because
+the exclusive hierarchy's union is one LRU stack (see ``batch_sim``), so
+L2 hits are precisely the reuses in ``[c1_i, c1_i + c2_i)``.
 """
 from __future__ import annotations
 
@@ -31,7 +38,8 @@ import numpy as np
 
 from repro.core.mrc import HitRatioFunction
 
-__all__ = ["PartitionResult", "greedy_allocate", "pgd_solve", "aggregate_latency"]
+__all__ = ["PartitionResult", "greedy_allocate", "pgd_solve",
+           "aggregate_latency", "two_level_solve"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,6 +120,33 @@ def greedy_allocate(hs: list[HitRatioFunction], capacity: int,
         sizes, False,
         aggregate_latency(hs, sizes, t_fast, t_slow, w),
         np.array([h(int(s)) for h, s in zip(hs, sizes)]))
+
+
+def two_level_solve(hs: list[HitRatioFunction], capacity: int,
+                    capacity2: int, t_fast: float, t_fast2: float,
+                    t_slow: float, c_min: int = 0,
+                    partition_fn=None,
+                    weights: np.ndarray | None = None
+                    ) -> tuple[PartitionResult, PartitionResult | None]:
+    """Eq. 2 with per-level capacities and per-level service times.
+
+    Stage 1 sizes L1 exactly as the single-level problem (``capacity2 == 0``
+    therefore reproduces it bit-identically); stage 2 runs the same
+    partitioner on the residual curves ``h_i.shifted(c1_i)`` against the
+    level-2 budget with gain ``t_slow - t_fast2`` and no per-tenant
+    minimum.  Returns ``(level1, level2)``; ``level2`` is ``None`` when
+    ``capacity2 <= 0``.
+    """
+    fn = partition_fn if partition_fn is not None else pgd_solve
+    # only forward weights when set: custom partition_fn callables predate
+    # the weights kwarg and must keep working unchanged
+    kw = {} if weights is None else {"weights": weights}
+    p1 = fn(hs, capacity, t_fast, t_slow, c_min=c_min, **kw)
+    if capacity2 <= 0:
+        return p1, None
+    shifted = [h.shifted(int(s)) for h, s in zip(hs, p1.sizes)]
+    p2 = fn(shifted, capacity2, t_fast2, t_slow, c_min=0, **kw)
+    return p1, p2
 
 
 def _project_capacity_box(c: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,

@@ -27,6 +27,37 @@ across long traces or policy switches on a persistent cache.
 
 ``simulate`` is the per-access oracle; ``repro.core.batch_sim`` replays the
 same semantics vectorized for all tenants of a Δt window at once.
+
+Two-level hierarchy (ETICA)
+===========================
+
+``simulate`` also interprets an exclusive **two-level** hierarchy — a vector
+of ``(capacity, policy)`` levels — with ETICA semantics (Ahmadian et al.):
+
+  * L1 hit: touch (global MRU).  L1-miss-L2-hit: the block is *promoted*
+    (removed from L2, installed at L1's MRU; 1 L1 cache write) and served at
+    ``t_fast2``.  Full miss: served at ``t_slow`` and installed into L1.
+  * Every install into a full L1 *demotes* the L1 victim into L2's MRU
+    (1 L2 cache write); eviction from L2 is final (dirty evictions charge
+    ``flush_cost``).
+  * Because every touch moves the block to the global MRU and every victim
+    re-enters immediately below L1, the *union* of the two levels is a
+    single LRU stack of ``C1 + C2`` blocks whose top ``C1`` entries are L1 —
+    the Mattson property the batch engine exploits (one stack-distance
+    array, two capacity thresholds).
+  * Per-level write policy: ``policy`` (L1) governs write admission exactly
+    as in the single-level scheme; ``policy2`` governs whether L2 accepts
+    dirty blocks.  ``policy2 != WB`` keeps L2 *clean*: dirty victims are
+    flushed at demotion time (charging ``flush_cost``) and enter L2 clean,
+    so evictions from L2 never cost a write-back — the ETICA endurance
+    argument for the flash level.  Any dirty blocks already in L2 when a
+    clean policy takes effect are flushed up-front.
+  * At replay start the hierarchy invariant "L1 full or L2 empty" is
+    restored by ``rebalance_levels`` (the actuator growing L1 refills it
+    from L2's MRU side; union recency order is unchanged).
+  * Degenerate ``C1 == 0``: L2 is the single level (hits cost ``t_fast2``,
+    installs/modifies count as L2 cache writes, ``policy2`` is moot).
+    ``C2 == 0`` reduces bit-identically to the single-level scheme.
 """
 from __future__ import annotations
 
@@ -38,19 +69,25 @@ import numpy as np
 from repro.core.trace import Trace
 from repro.core.write_policy import WritePolicy
 
-__all__ = ["SimResult", "LRUCache", "simulate"]
+__all__ = ["SimResult", "LRUCache", "simulate", "rebalance_levels"]
 
 
 @dataclasses.dataclass
 class SimResult:
     reads: int = 0
-    read_hits: int = 0
+    read_hits: int = 0             # reads served from L1 (the fast tier)
     writes: int = 0
-    write_hits: int = 0            # writes that touched a resident block
-    cache_writes: int = 0          # installs + in-place modifies (endurance)
+    write_hits: int = 0            # writes that touched an L1-resident block
+    cache_writes: int = 0          # L1 installs + in-place modifies (endurance)
     total_latency: float = 0.0
     capacity: int = 0
     policy: str = "wb"
+    # ---- level-2 accounting (all zero for a single-level hierarchy) ----
+    read_hits_l2: int = 0          # reads served from L2 (promotions)
+    write_hits_l2: int = 0         # writes that touched an L2-resident block
+    cache_writes_l2: int = 0       # demotions into L2 (+ direct L2 installs)
+    capacity2: int = 0
+    policy2: str = "wb"
 
     @property
     def n(self) -> int:
@@ -62,8 +99,18 @@ class SimResult:
 
     @property
     def hit_ratio(self) -> float:
-        """Read hits over all accesses (paper's h in Eq. 2)."""
+        """L1 read hits over all accesses (paper's h in Eq. 2)."""
         return self.read_hits / self.n if self.n else 0.0
+
+    @property
+    def hit_ratio_l2(self) -> float:
+        """L2 read hits over all accesses (second-level h in ETICA Eq. 2)."""
+        return self.read_hits_l2 / self.n if self.n else 0.0
+
+    @property
+    def union_hit_ratio(self) -> float:
+        """Read hits anywhere in the hierarchy over all accesses."""
+        return (self.read_hits + self.read_hits_l2) / self.n if self.n else 0.0
 
     @property
     def mean_latency(self) -> float:
@@ -182,15 +229,200 @@ class LRUCache:
         return out
 
 
+def rebalance_levels(c1: LRUCache, c2: LRUCache) -> None:
+    """Restore the hierarchy invariant "L1 full or L2 empty".
+
+    Promotes L2's MRU blocks into L1's LRU end until L1 is full or L2 is
+    empty.  The union recency order is unchanged (the moved blocks sit
+    directly below the old L1 content), so this is a pure re-labelling of
+    which device holds each block — the actuator refilling the fast tier
+    after growing it.  Both replay engines call this at window start so
+    "L1 == top C1 of the union LRU stack" holds throughout the window.
+    """
+    need = c1.capacity - len(c1)
+    if need <= 0 or len(c2) == 0:
+        return
+    a1, f1 = c1.state_arrays()
+    a2, f2 = c2.state_arrays()
+    k = min(need, int(a2.shape[0]))
+    c1.set_state_arrays(np.concatenate([a2[-k:], a1]),
+                        np.concatenate([f2[-k:], f1]))
+    c2.set_state_arrays(a2[:-k].copy(), f2[:-k].copy())
+
+
+def _simulate_two_level(trace: Trace, c1: LRUCache, c2: LRUCache,
+                        policy: WritePolicy, policy2: WritePolicy,
+                        t_fast: float, t_fast2: float, t_slow: float,
+                        t_write_bypass: float, flush_cost: float) -> SimResult:
+    """Per-access interpreter for the exclusive two-level hierarchy.
+
+    The stateful oracle: promotion on L2 hit, demote-on-evict from L1 into
+    L2, per-level write policies (``policy2 != WB`` keeps L2 clean by
+    flushing dirty victims at demotion).  ``repro.core.batch_sim`` must
+    reproduce this exactly (property-tested in ``tests/test_two_level.py``).
+    """
+    cap1, cap2 = c1.capacity, c2.capacity
+    r = SimResult(capacity=cap1, policy=policy.value,
+                  capacity2=cap2, policy2=policy2.value)
+    rebalance_levels(c1, c2)
+    clean2 = policy2 is not WritePolicy.WB and cap2 > 0 and cap1 > 0
+    # dirty shadows mirror each level's own flags (survive eviction return)
+    d1: dict[int, bool] = dict(c1._od)
+    d2: dict[int, bool] = dict(c2._od)
+    if clean2:
+        # a clean L2 policy taking effect flushes any dirty L2 content
+        for a, fl in c2._od.items():
+            if fl:
+                c2._od[a] = False
+                d2[a] = False
+                if flush_cost > 0.0:
+                    r.total_latency += flush_cost
+
+    def final_evict(addr: int, dirty: bool) -> None:
+        if dirty and flush_cost > 0.0:
+            r.total_latency += flush_cost
+
+    def demote(addr: int, dirty: bool) -> None:
+        """L1 victim displaced: push into L2's MRU (or evict for good)."""
+        if cap2 <= 0:
+            final_evict(addr, dirty)
+            return
+        if clean2 and dirty:
+            if flush_cost > 0.0:
+                r.total_latency += flush_cost
+            dirty = False
+        ev = c2.insert(addr, dirty)
+        d2[addr] = dirty
+        r.cache_writes_l2 += 1
+        if ev is not None:
+            final_evict(ev, d2.pop(ev, False))
+
+    def install_l1(addr: int, dirty: bool) -> None:
+        """Insert at the hierarchy's global MRU (caller ensured cap1 > 0)."""
+        ev = c1.insert(addr, dirty)
+        d1[addr] = dirty
+        r.cache_writes += 1
+        if ev is not None:
+            demote(ev, d1.pop(ev, False))
+
+    def install_top(addr: int, dirty: bool) -> None:
+        if cap1 > 0:
+            install_l1(addr, dirty)
+        else:                                    # degenerate: L2 is the level
+            ev = c2.insert(addr, dirty)
+            d2[addr] = dirty
+            r.cache_writes_l2 += 1
+            if ev is not None:
+                final_evict(ev, d2.pop(ev, False))
+
+    captot = cap1 + cap2
+    addrs, is_read = trace.addrs, trace.is_read
+    for i in range(len(trace)):
+        a = int(addrs[i])
+        if is_read[i]:
+            r.reads += 1
+            if a in c1:
+                r.read_hits += 1
+                c1.touch(a)
+                r.total_latency += t_fast
+            elif a in c2:
+                r.read_hits_l2 += 1
+                r.total_latency += t_fast2
+                if cap1 > 0:                     # promote on L2 hit
+                    fl = d2.pop(a, False)
+                    c2.invalidate(a)
+                    install_l1(a, fl)
+                else:                            # L2 is the only level
+                    c2.touch(a)
+            else:
+                r.total_latency += t_slow
+                if captot > 0:
+                    install_top(a, False)
+        else:
+            r.writes += 1
+            if policy is WritePolicy.WB:
+                if a in c1:
+                    r.write_hits += 1
+                    c1.mark_dirty(a)
+                    d1[a] = True
+                    r.cache_writes += 1          # in-place modify
+                    r.total_latency += t_fast
+                elif a in c2:
+                    r.write_hits_l2 += 1
+                    if cap1 > 0:
+                        d2.pop(a, None)
+                        c2.invalidate(a)
+                        install_l1(a, True)      # promote, dirtied by the write
+                        r.total_latency += t_fast
+                    else:
+                        c2.mark_dirty(a)
+                        d2[a] = True
+                        r.cache_writes_l2 += 1
+                        r.total_latency += t_fast2
+                elif captot > 0:
+                    install_top(a, True)
+                    r.total_latency += (t_fast if cap1 > 0 else t_fast2)
+                else:
+                    r.total_latency += t_write_bypass
+            elif policy is WritePolicy.WT:
+                if a in c1:
+                    r.write_hits += 1
+                    c1.mark_clean(a)             # propagated synchronously
+                    d1[a] = False
+                    r.cache_writes += 1
+                elif a in c2:
+                    r.write_hits_l2 += 1
+                    if cap1 > 0:
+                        d2.pop(a, None)
+                        c2.invalidate(a)
+                        install_l1(a, False)     # promote clean
+                    else:
+                        c2.mark_clean(a)
+                        d2[a] = False
+                        r.cache_writes_l2 += 1
+                elif captot > 0:
+                    install_top(a, False)
+                r.total_latency += t_write_bypass
+            else:  # RO: write-around invalidates every cached copy
+                if a in c1:
+                    r.write_hits += 1
+                    c1.invalidate(a)
+                    d1.pop(a, None)
+                elif a in c2:
+                    r.write_hits_l2 += 1
+                    c2.invalidate(a)
+                    d2.pop(a, None)
+                r.total_latency += t_write_bypass
+    return r
+
+
 def simulate(trace: Trace, capacity: int,
              policy: WritePolicy = WritePolicy.WB,
              t_fast: float = 1.0, t_slow: float = 20.0,
              t_write_bypass: float | None = None,
              flush_cost: float = 0.0,
-             cache: LRUCache | None = None) -> SimResult:
-    """Replay ``trace`` against an LRU partition of ``capacity`` blocks."""
+             cache: LRUCache | None = None, *,
+             capacity2: int = 0,
+             policy2: WritePolicy = WritePolicy.WB,
+             t_fast2: float | None = None,
+             cache2: LRUCache | None = None) -> SimResult:
+    """Replay ``trace`` against an LRU partition of ``capacity`` blocks.
+
+    With ``capacity2 > 0`` (or a non-empty ``cache2``) the partition is an
+    exclusive two-level hierarchy — see the module docstring.  With the
+    default ``capacity2 == 0`` the single-level path below runs unchanged.
+    """
     if t_write_bypass is None:
         t_write_bypass = 1.2 * t_fast
+    if cache2 is not None or capacity2 > 0:
+        c2 = cache2 if cache2 is not None else LRUCache(capacity2)
+        if c2.capacity > 0 or len(c2) > 0:
+            if t_fast2 is None:
+                t_fast2 = 3.0 * t_fast
+            c1 = cache if cache is not None else LRUCache(capacity)
+            return _simulate_two_level(trace, c1, c2, policy, policy2,
+                                       t_fast, t_fast2, t_slow,
+                                       t_write_bypass, flush_cost)
     c = cache if cache is not None else LRUCache(capacity)
     cap = c.capacity
     r = SimResult(capacity=cap, policy=policy.value)

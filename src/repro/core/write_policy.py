@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.core.trace import AccessClass, Trace, classify_accesses
 
-__all__ = ["WritePolicy", "write_ratio", "assign_write_policy"]
+__all__ = ["WritePolicy", "write_ratio", "assign_write_policy",
+           "assign_write_policy_levels"]
 
 
 class WritePolicy(enum.Enum):
@@ -41,3 +42,20 @@ def assign_write_policy(trace: Trace, w_threshold: float = 0.5) -> WritePolicy:
     """RO when unreferenced-write re-touches dominate, else WB (Alg. 3)."""
     return (WritePolicy.RO if write_ratio(trace) >= w_threshold
             else WritePolicy.WB)
+
+
+def assign_write_policy_levels(trace: Trace, w_threshold: float = 0.5,
+                               w_threshold2: float = 0.3
+                               ) -> tuple[WritePolicy, WritePolicy]:
+    """ETICA-style per-level Alg. 3 from one request-type classification.
+
+    Each level applies the Alg.-3 rule at its own threshold to the same
+    writeRatio.  Level 2 (the larger, endurance-sensitive device) uses a
+    *stricter* (lower) threshold: at moderate WAW/WAR pressure it already
+    switches to the clean policy (``RO``: dirty victims are flushed at
+    demotion and never stored dirty — see ``simulator``), while L1 only
+    gives up write buffering when unreferenced writes dominate outright.
+    """
+    wr = write_ratio(trace)
+    return (WritePolicy.RO if wr >= w_threshold else WritePolicy.WB,
+            WritePolicy.RO if wr >= w_threshold2 else WritePolicy.WB)

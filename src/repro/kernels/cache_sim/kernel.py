@@ -25,7 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import tpu_compiler_params
 
-__all__ = ["cache_sim_scan"]
+__all__ = ["cache_sim_scan", "cache_sim_levels_scan"]
 
 
 def _kernel(prev_ref, nxt_ref, occ_ref, out_ref, acc_scr, *, tile: int):
@@ -96,3 +96,82 @@ def cache_sim_scan(prev: jax.Array, nxt: jax.Array, occ: jax.Array, *,
         interpret=interpret,
     )(prev2, nxt2, occ2)
     return out.reshape(nt * tile)[:n]
+
+
+def _levels_kernel(prev_ref, nxt_ref, occ_ref, cap1_ref, captot_ref,
+                   l1_ref, un_ref, acc_scr, *, tile: int):
+    ii = pl.program_id(0)
+    jj = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(jj == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    prev_i = prev_ref[0]                                 # [1, tile] int32
+    i_idx = ii * tile + jax.lax.broadcasted_iota(
+        jnp.int32, (tile, tile), 0)
+    j_idx = jj * tile + jax.lax.broadcasted_iota(
+        jnp.int32, (tile, tile), 1)
+    nxt_j = nxt_ref[0]
+    occ_j = occ_ref[0]
+
+    contrib = (
+        (j_idx > prev_i.reshape(tile, 1))
+        & (j_idx < i_idx)
+        & (nxt_j.reshape(1, tile) >= i_idx)
+        & (occ_j.reshape(1, tile) > 0)
+    )
+    acc_scr[...] += jnp.sum(contrib.astype(jnp.float32), axis=1,
+                            keepdims=True)
+
+    @pl.when(jj == nj - 1)
+    def _finalize():
+        cnt = acc_scr[...].reshape(tile).astype(jnp.int32)
+        hot = prev_i >= 0                                # cold rows -> 0
+        l1_ref[0] = (hot & (cnt < cap1_ref[0])).astype(jnp.int32)
+        un_ref[0] = (hot & (cnt < captot_ref[0])).astype(jnp.int32)
+
+
+def cache_sim_levels_scan(prev: jax.Array, nxt: jax.Array, occ: jax.Array,
+                          cap1: jax.Array, captot: jax.Array, *,
+                          tile: int = 256, interpret: bool = False
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Both-level residency masks in one launch (same counting layout).
+
+    The accumulated count is compared in-kernel against the two per-access
+    capacity thresholds (``cap1[i]`` = L1 blocks, ``captot[i]`` = L1 + L2
+    blocks of the access's tenant): an access is an L1 hit iff
+    ``SD < cap1`` and a hierarchy hit iff ``SD < captot`` — the exclusive
+    two-level hierarchy's union is a single LRU stack (see batch_sim).
+    Returns int32 0/1 masks ``(l1, union)``; cold rows are 0.
+    """
+    n = prev.shape[0]
+    nt = -(-n // tile)
+    pad = nt * tile - n
+    if pad:
+        prev = jnp.pad(prev, (0, pad), constant_values=n)
+        nxt = jnp.pad(nxt, (0, pad), constant_values=-1)
+        occ = jnp.pad(occ, (0, pad), constant_values=0)
+        cap1 = jnp.pad(cap1, (0, pad), constant_values=0)
+        captot = jnp.pad(captot, (0, pad), constant_values=0)
+    shape2 = (nt, tile)
+    args = [a.reshape(shape2).astype(jnp.int32)
+            for a in (prev, nxt, occ, cap1, captot)]
+
+    kernel = functools.partial(_levels_kernel, tile=tile)
+    i_spec = pl.BlockSpec((1, tile), lambda i, j: (i, 0))
+    j_spec = pl.BlockSpec((1, tile), lambda i, j: (j, 0))
+    l1, un = pl.pallas_call(
+        kernel,
+        grid=(nt, nt),
+        in_specs=[i_spec, j_spec, j_spec, i_spec, i_spec],
+        out_specs=(i_spec, i_spec),
+        out_shape=(jax.ShapeDtypeStruct(shape2, jnp.int32),
+                   jax.ShapeDtypeStruct(shape2, jnp.int32)),
+        scratch_shapes=[pltpu.VMEM((tile, 1), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+    return (l1.reshape(nt * tile)[:n], un.reshape(nt * tile)[:n])

@@ -13,10 +13,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.cache_sim.kernel import cache_sim_scan
-from repro.kernels.cache_sim.ref import cache_sim_ref
+from repro.kernels.cache_sim.kernel import (cache_sim_levels_scan,
+                                            cache_sim_scan)
+from repro.kernels.cache_sim.ref import cache_sim_levels_ref, cache_sim_ref
 
-__all__ = ["cache_sim_op", "stack_distances_accel"]
+__all__ = ["cache_sim_op", "cache_sim_levels_op", "stack_distances_accel",
+           "residency_levels_accel"]
 
 
 def _on_tpu() -> bool:
@@ -30,6 +32,17 @@ def cache_sim_op(prev, nxt, occ, *, use_kernel: bool | None = None):
     if use_kernel:
         return cache_sim_scan(prev, nxt, occ, interpret=not _on_tpu())
     return cache_sim_ref(prev, nxt, occ)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def cache_sim_levels_op(prev, nxt, occ, cap1, captot, *,
+                        use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return cache_sim_levels_scan(prev, nxt, occ, cap1, captot,
+                                     interpret=not _on_tpu())
+    return cache_sim_levels_ref(prev, nxt, occ, cap1, captot)
 
 
 def stack_distances_accel(prev: np.ndarray, nxt: np.ndarray,
@@ -47,3 +60,26 @@ def stack_distances_accel(prev: np.ndarray, nxt: np.ndarray,
     hot = prev >= 0
     out[hot] = counts[hot].astype(np.int64)
     return out
+
+
+def residency_levels_accel(prev: np.ndarray, nxt: np.ndarray,
+                           cap1: np.ndarray, captot: np.ndarray,
+                           occ: np.ndarray | None = None,
+                           use_kernel: bool | None = None
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Both-level residency as bool masks ``(l1, union)`` per access.
+
+    The accelerator path of the two-level batch engine: one counting
+    launch classifies every access of the tape against its tenant's L1 and
+    L1+L2 capacity thresholds (see ``cache_sim_levels_scan``).
+    """
+    n = prev.shape[0]
+    if occ is None:
+        occ = np.ones(n, dtype=np.int32)
+    l1, un = cache_sim_levels_op(jnp.asarray(prev, jnp.int32),
+                                 jnp.asarray(nxt, jnp.int32),
+                                 jnp.asarray(occ, jnp.int32),
+                                 jnp.asarray(cap1, jnp.int32),
+                                 jnp.asarray(captot, jnp.int32),
+                                 use_kernel=use_kernel)
+    return np.asarray(l1).astype(bool), np.asarray(un).astype(bool)

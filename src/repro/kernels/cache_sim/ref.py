@@ -1,10 +1,10 @@
-"""Pure-jnp oracle for the occupancy-masked stack-distance kernel."""
+"""Pure-jnp oracles for the occupancy-masked stack-distance kernel."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["cache_sim_ref"]
+__all__ = ["cache_sim_ref", "cache_sim_levels_ref"]
 
 
 def cache_sim_ref(prev: jax.Array, nxt: jax.Array,
@@ -21,3 +21,23 @@ def cache_sim_ref(prev: jax.Array, nxt: jax.Array,
     contrib = ((j_idx > prev[:, None]) & (j_idx < i_idx)
                & (nxt[None, :] >= i_idx) & (occ[None, :] > 0))
     return jnp.sum(contrib, axis=1).astype(jnp.int32)
+
+
+def cache_sim_levels_ref(prev: jax.Array, nxt: jax.Array, occ: jax.Array,
+                         cap1: jax.Array, captot: jax.Array
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Both-level residency masks from one counting pass (jnp oracle).
+
+    For the exclusive two-level hierarchy the union of the levels is a
+    single LRU stack whose top ``cap1[i]`` entries are L1, so
+
+        l1[i]    = prev[i] >= 0  and  SD(i) < cap1[i]
+        union[i] = prev[i] >= 0  and  SD(i) < captot[i]
+
+    (an access is an L2 hit iff ``union & ~l1``).  ``cap1``/``captot`` are
+    per-access so one tape launch covers tenants with different quotas.
+    """
+    counts = cache_sim_ref(prev, nxt, occ)
+    hot = prev >= 0
+    return ((hot & (counts < cap1)).astype(jnp.int32),
+            (hot & (counts < captot)).astype(jnp.int32))

@@ -105,6 +105,109 @@ def test_release_tenant():
     assert len(pool.free) == 16
 
 
+def _tiered(n_pages=32, capacity=16, capacity2=0, window_events=10**9,
+            tenants=("t0", "t1")):
+    pool = BlockPool(n_pages, 8, 2, 2, 16, allocate_device=False)
+    mgr = ECICacheManager(capacity, list(tenants), c_min=2,
+                          initial_blocks=8, capacity2=capacity2)
+    return pool, mgr, TieredKVCache(pool, mgr, window_events=window_events)
+
+
+def test_managed_host_demote_then_promote():
+    """HBM victims land in the managed host tier; a later read is a host
+    hit that promotes the page back into the pool."""
+    pool, mgr, tiered = _tiered(n_pages=4, capacity2=64)
+    for i in range(4):
+        assert tiered.access_page(0, ("k", i), fresh=True) == "hbm"
+    # pool full: admitting one more evicts the LRU page ("k", 0) -> demote
+    tiered.access_page(0, ("k", 4), fresh=True)
+    assert tiered.stats[0].demotions == 1
+    assert ("k", 0) in tiered.host_lru[0]
+    served = tiered.access_page(0, ("k", 0), fresh=False)
+    assert served == "host"
+    assert tiered.stats[0].host_hits == 1
+    assert tiered.stats[0].promotions == 1
+    assert ("k", 0) not in tiered.host_lru[0]       # exclusive levels
+    assert pool.lookup(("k", 0)) is not None
+    # unmanaged mode keeps the legacy "host retains everything" behaviour
+    pool2, _, t2 = _tiered(n_pages=4, capacity2=0)
+    for i in range(5):
+        t2.access_page(0, ("k", i), fresh=True)
+    assert t2.stats[0].demotions == 0
+    assert t2.access_page(0, ("k", 0), fresh=False) == "host"
+
+
+def test_managed_host_eviction_is_a_real_miss():
+    """Pages falling off the managed host tier must be recomputed."""
+    pool, mgr, tiered = _tiered(n_pages=4, capacity2=8)
+    tiered.host_quotas[0] = 2
+    for i in range(4):
+        tiered.access_page(0, ("k", i), fresh=True)
+    for i in range(4, 8):                 # 4 more admissions -> 4 demotions
+        tiered.access_page(0, ("k", i), fresh=True)
+    assert tiered.stats[0].demotions == 4
+    assert tiered.stats[0].host_evictions == 2      # quota 2: oldest fell off
+    assert len(tiered.host_lru[0]) == 2
+    assert tiered.access_page(0, ("k", 0), fresh=False) == "miss"
+    assert tiered.stats[0].misses == 1
+
+
+def test_finish_tenant_redistributes_quota():
+    """Retired tenants are excluded from partitioning and their freed
+    space is redistributed at the next rebalance()."""
+    pool, mgr, tiered = _tiered(n_pages=64, capacity=20, capacity2=30)
+    # both tenants demand more than half the pool: infeasible regime
+    for t in range(2):
+        for i in range(40):
+            tiered.access_page(t, (t, i), fresh=True)
+        for i in range(40):
+            tiered.access_page(t, (t, i), fresh=False)
+    tiered.rebalance()
+    before = dict(tiered.quotas)
+    assert sum(v for v in before.values() if v) <= 20
+    share_before = before[1]
+
+    demo_before = tiered.stats[0].demotions
+    hev_before = tiered.stats[0].host_evictions
+    tiered.finish_tenant(0)
+    assert pool.resident(0) == 0
+    assert not mgr.tenants[0].active
+    assert len(tiered.host_lru[0]) == 0
+    # retiring pages are releases, not demotions: stats stay clean
+    assert tiered.stats[0].demotions == demo_before
+    assert tiered.stats[0].host_evictions == hev_before
+    for i in range(40):
+        tiered.access_page(1, (1, i), fresh=False)
+    tiered.rebalance()
+    d = mgr.history[-1]
+    assert d.sizes[0] == 0                          # excluded from Alg. 1
+    assert d.sizes2 is None or d.sizes2[0] == 0
+    assert tiered.quotas[1] >= share_before         # freed space flows over
+    assert tiered.quotas[0] == 0
+    # retired tenant stays excluded and untouched on further rebalances
+    for i in range(10):
+        tiered.access_page(1, (1, 100 + i), fresh=True)
+    tiered.rebalance()
+    assert mgr.tenants[0].cache.capacity == 0
+    assert mgr.tenants[0].cache2.capacity == 0
+
+
+def test_monitor_batching_grows_and_flushes():
+    pool, mgr, tiered = _tiered(window_events=10**9)
+    # shrink the preallocated buffers so one doubling is exercised cheaply
+    tiered._ev_tenant = np.empty(16, np.int32)
+    tiered._ev_addr = np.empty(16, np.int64)
+    tiered._ev_read = np.empty(16, bool)
+    for i in range(20):
+        tiered.access_page(i % 2, ("g", i), fresh=True)
+    assert tiered._ev_addr.size == 32               # doubled once
+    assert tiered._n_ev == 20
+    tiered.rebalance()
+    assert tiered._n_ev == 0
+    assert tiered.rebalance_seconds > 0.0
+    assert len(mgr.history) == 1                    # analyzer consumed them
+
+
 def test_rebalance_applies_quotas():
     eng, pool, tiered, cfg, _ = _engine(window_events=4, capacity=16)
     rng = np.random.default_rng(3)
