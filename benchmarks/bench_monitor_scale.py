@@ -1,0 +1,197 @@
+"""Thousand-tenant control plane — analyze+partition wall time at scale.
+
+Measures one Δt decision (Monitor reuse distances → hit-ratio curves →
+Alg.-3 write ratios → Eq.-2 partition) for tenant counts {16, 128, 1024}
+on synthetic mixes, three ways:
+
+  * ``seed``    — the pre-fusion control plane: a Python loop per tenant
+    (``reuse_distances_fast`` + ``build_hit_ratio_function`` +
+    ``write_ratio``) and the heap breakpoint walk (``method="heap"``) —
+    exactly what ``ECICacheManager.analyze`` did per window when no batch
+    replay supplied precomputed distances (the serving-style deployment).
+  * ``fused``   — ``analyze_windows`` exact (one counting pass, batched
+    curves/ratios) + the vectorized ``greedy_allocate`` fast walk.
+    Allocations must be **bit-identical** to seed.
+  * ``sampled`` — ``analyze_windows`` with SHARDS ``sample_rate="auto"``
+    + the fast walk: the thousand-tenant default.
+
+Checks: fused ≡ seed allocations at every scale; sampled allocations
+within 5% aggregate latency of exact both on the synthetic mixes and on
+the Table-3 workloads (prxy_0/prn_1/hm_1/web_1, default auto-tuner); and
+≥50× seed→sampled speedup at 1024 tenants (full mode only).  Results are
+written to ``BENCH_monitor_scale.json``.
+
+``--smoke`` (the CI configuration) runs the 16-tenant point only with a
+short window — fast, and still fails on any control-plane hot-path
+regression (equality/latency checks, not the speedup).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core import (Trace, aggregate_latency, analyze_windows,
+                        build_hit_ratio_function, greedy_allocate,
+                        reuse_distances_fast, urd_cache_blocks)
+from repro.core.batch_sim import _accel_default
+from repro.core.write_policy import write_ratio
+from repro.data.traces import msr_trace
+
+from benchmarks.common import emit
+
+TABLE3_NAMES = ("prxy_0", "prn_1", "hm_1", "web_1")
+SIM = dict(t_fast=1.0, t_slow=20.0)
+
+
+def synthetic_mix(n_tenants: int, n: int, seed: int = 0) -> list[Trace]:
+    """Fast vectorized zipf-ish mixes (trace realism is irrelevant to the
+    control-plane cost; the Table-3 check below uses the MSR profiles)."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_tenants):
+        ws = int(rng.integers(300, 3000))
+        u = rng.random(n)
+        addrs = np.minimum((u ** 2.2) * ws, ws - 1).astype(np.int64)
+        is_read = rng.random(n) < float(rng.uniform(0.4, 0.9))
+        out.append(Trace(addrs, is_read, f"mix{i}"))
+    return out
+
+
+def seed_path(traces, capacity, c_min):
+    """The pre-fusion per-tenant Analyzer loop + heap partitioner."""
+    hs = []
+    for tr in traces:
+        rd = reuse_distances_fast(tr, "urd")
+        hs.append(build_hit_ratio_function(rd))
+        urd_cache_blocks(rd)
+        write_ratio(tr)
+    part = greedy_allocate(hs, capacity, SIM["t_fast"], SIM["t_slow"],
+                           c_min=c_min, method="heap")
+    return part, hs
+
+
+def fused_path(traces, capacity, c_min, sample_rate=None, target=256,
+               floor=64):
+    mon = analyze_windows(traces, "urd", sample_rate=sample_rate,
+                          sample_target=target, sample_floor=floor)
+    part = greedy_allocate(mon.curves, capacity, SIM["t_fast"],
+                           SIM["t_slow"], c_min=c_min, method="fast")
+    return part, mon
+
+
+def run_scale(n_tenants: int, n: int, c_min: int = 50,
+              reps: int = 3) -> dict:
+    traces = synthetic_mix(n_tenants, n, seed=7)
+    # capacity between Σc_min and ΣURD so the partitioner actually walks
+    urd_total = sum(h.max_useful_size
+                    for h in analyze_windows(traces, "urd").curves)
+    capacity = max(n_tenants * c_min + 1, int(0.35 * urd_total))
+
+    t0 = time.perf_counter()
+    p_seed, hs_exact = seed_path(traces, capacity, c_min)
+    seed_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    p_fused, _ = fused_path(traces, capacity, c_min)
+    fused_s = time.perf_counter() - t0
+
+    # wall clock is noisy on small boxes and the sampled decision runs in
+    # milliseconds: take best-of-reps (seed/fused are seconds-long and
+    # stable enough single-shot)
+    sampled_s = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        p_smp, mon_smp = fused_path(traces, capacity, c_min,
+                                    sample_rate="auto")
+        sampled_s = min(sampled_s, time.perf_counter() - t0)
+
+    lat_exact = aggregate_latency(hs_exact, p_seed.sizes, **SIM)
+    lat_smp = aggregate_latency(hs_exact, p_smp.sizes, **SIM)
+    row = {
+        "tenants": n_tenants, "n_per_window": n, "capacity": capacity,
+        "seed_s": seed_s, "fused_s": fused_s, "sampled_s": sampled_s,
+        "speedup_fused": seed_s / max(fused_s, 1e-12),
+        "speedup_sampled": seed_s / max(sampled_s, 1e-12),
+        "fused_bit_identical": bool(np.array_equal(p_seed.sizes,
+                                                   p_fused.sizes)),
+        "sampled_latency_ratio": lat_smp / max(lat_exact, 1e-12),
+        "mean_expected_error": float(mon_smp.expected_errors.mean()),
+    }
+    emit(f"monitor_scale_T{n_tenants}_seed", seed_s * 1e6, f"{seed_s:.3f}s")
+    emit(f"monitor_scale_T{n_tenants}_fused", fused_s * 1e6,
+         f"speedup={row['speedup_fused']:.1f}x_identical="
+         f"{row['fused_bit_identical']}")
+    emit(f"monitor_scale_T{n_tenants}_sampled", sampled_s * 1e6,
+         f"speedup={row['speedup_sampled']:.1f}x_lat_ratio="
+         f"{row['sampled_latency_ratio']:.4f}")
+    return row
+
+
+def table3_decision_check(n: int = 8000, target: int = 4096) -> dict:
+    """Sampled vs exact *decisions* on the Table-3 workloads: the sampled
+    allocation must cost within 5% aggregate latency of the exact one
+    (evaluated on the exact curves).  ``target`` must keep the auto-tuner
+    rate below 1 for the window length, or the check is vacuous."""
+    traces = [msr_trace(nm, n, seed=3) for nm in TABLE3_NAMES]
+    mon = analyze_windows(traces, "urd")
+    urd_total = int(mon.curves.max_useful_sizes.sum())
+    capacity = max(1, urd_total // 2)
+    p_exact = greedy_allocate(mon.curves, capacity, SIM["t_fast"],
+                              SIM["t_slow"], c_min=50)
+    mon_s = analyze_windows(traces, "urd", sample_rate="auto",
+                            sample_target=target, sample_floor=64)
+    p_smp = greedy_allocate(mon_s.curves, capacity, SIM["t_fast"],
+                            SIM["t_slow"], c_min=50)
+    lat_exact = aggregate_latency(mon.curves, p_exact.sizes, **SIM)
+    lat_smp = aggregate_latency(mon.curves, p_smp.sizes, **SIM)
+    ratio = lat_smp / max(lat_exact, 1e-12)
+    emit("monitor_scale_table3_sampled_vs_exact", 0.0,
+         f"lat_ratio={ratio:.4f}_rates="
+         + "|".join(f"{r:.2f}" for r in mon_s.sample_rates))
+    return {"latency_ratio": ratio, "within_5pct": bool(ratio <= 1.05)}
+
+
+def main(tenant_counts=(16, 128, 1024), n_per_window: int = 8000,
+         smoke: bool = False) -> dict:
+    _accel_default()          # warm the jax backend probe outside timings
+    if smoke:
+        tenant_counts, n_per_window = (16,), 2000
+    rows = [run_scale(t, n_per_window) for t in tenant_counts]
+    # smoke shrinks the tuner target so the sampled path is actually
+    # exercised (rate < 1) on the short CI windows
+    t3 = (table3_decision_check(2000, target=512) if smoke
+          else table3_decision_check(8000))
+    checks = {
+        "fused_bit_identical_all": all(r["fused_bit_identical"]
+                                       for r in rows),
+        "sampled_within_5pct_mix": all(r["sampled_latency_ratio"] <= 1.05
+                                       for r in rows),
+        "table3_sampled_within_5pct": t3["within_5pct"],
+    }
+    if 1024 in tenant_counts:
+        big = next(r for r in rows if r["tenants"] == 1024)
+        checks["speedup_1024_ge_50x"] = big["speedup_sampled"] >= 50.0
+    out = {"rows": rows, "table3": t3, "checks": checks}
+    with open("BENCH_monitor_scale.json", "w") as f:
+        json.dump(out, f, indent=2)
+    for k, v in checks.items():
+        emit(f"monitor_scale_check_{k}", 0.0, v)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI configuration: 16 tenants, short windows, "
+                         "equality/latency checks only")
+    ap.add_argument("--tenants", type=str, default=None,
+                    help="comma-separated tenant counts (default 16,128,1024)")
+    args = ap.parse_args()
+    counts = (tuple(int(x) for x in args.tenants.split(","))
+              if args.tenants else (16, 128, 1024))
+    result = main(counts, smoke=args.smoke)
+    if not all(result["checks"].values()):
+        raise SystemExit(f"CHECK FAILED: {result['checks']}")

@@ -7,13 +7,17 @@ from repro.core.batch_sim import (reuse_distances_fast,
                                   ro_token_replay_device, simulate_batch,
                                   simulate_many, stack_distances)
 from repro.core.manager import AnalyzerDecision, ECICacheManager, TenantState
-from repro.core.mrc import HitRatioFunction, build_hit_ratio_function
+from repro.core.monitor import MonitorResult, analyze_windows
+from repro.core.mrc import (BatchedHitRatioFunctions, HitRatioFunction,
+                            build_hit_ratio_function,
+                            build_hit_ratio_functions)
 from repro.core.partitioner import (PartitionResult, aggregate_latency,
                                     greedy_allocate, pgd_solve,
                                     two_level_solve)
-from repro.core.reuse_distance import (RDResult, max_rd, reuse_distances,
+from repro.core.reuse_distance import (RDResult, auto_sample_rate, max_rd,
+                                       reuse_distances,
                                        reuse_distances_vectorized,
-                                       sampled_reuse_distances,
+                                       sampled_reuse_distances, shards_salt,
                                        urd_cache_blocks)
 from repro.core.simulator import (LRUCache, SimResult, rebalance_levels,
                                   simulate)
@@ -23,16 +27,19 @@ from repro.core.write_policy import (WritePolicy, assign_write_policy,
                                      assign_write_policy_levels, write_ratio)
 
 __all__ = [
-    "AccessClass", "AnalyzerDecision", "ECICacheManager", "GlobalLRUManager",
-    "HitRatioFunction", "LRUCache", "PartitionResult", "RDResult", "SimResult",
+    "AccessClass", "AnalyzerDecision", "BatchedHitRatioFunctions",
+    "ECICacheManager", "GlobalLRUManager",
+    "HitRatioFunction", "LRUCache", "MonitorResult", "PartitionResult",
+    "RDResult", "SimResult",
     "TenantState", "Trace", "WritePolicy", "aggregate_latency",
-    "assign_write_policy", "assign_write_policy_levels",
-    "build_hit_ratio_function", "classify_accesses",
+    "analyze_windows", "assign_write_policy", "assign_write_policy_levels",
+    "auto_sample_rate", "build_hit_ratio_function",
+    "build_hit_ratio_functions", "classify_accesses",
     "greedy_allocate", "make_manager", "max_rd", "pgd_solve",
     "rebalance_levels", "request_type_mix", "reuse_distances",
     "reuse_distances_fast", "reuse_distances_vectorized",
-    "ro_token_replay_device", "sampled_reuse_distances", "simulate",
-    "simulate_batch", "simulate_many", "stack_distances",
+    "ro_token_replay_device", "sampled_reuse_distances", "shards_salt",
+    "simulate", "simulate_batch", "simulate_many", "stack_distances",
     "total_cache_writes_wb", "two_level_solve", "urd_cache_blocks",
     "write_ratio",
 ]

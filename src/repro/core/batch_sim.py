@@ -427,7 +427,10 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     classified against the same stack-distance array).  RO tenants whose
     window fails the no-eviction guard (see module docstring) are replayed
     with the token loop (single-level) or the interpreter (two-level)
-    instead — same results, just slower.
+    instead — same results, just slower; the two-level interpreter
+    fallbacks are flagged with ``SimResult.fallback = 1`` so deployments
+    can measure how often the vectorized path is missed
+    (``ECICacheManager`` aggregates the counter).
 
     With ``return_window_rd=True`` also returns, per tenant, the TRD
     sample array of the *window* trace (``reuse_distances(trace, "trd")``,
@@ -620,6 +623,7 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
                 if cap1 > 0 and cap2 > 0:
                     fallback.add(t)
                     results[k] = run_interp(k)
+                    results[k].fallback = 1      # telemetry: counted upstream
                 else:
                     tokens[t] = token_replay(
                         is_read[s:e], prev[s:e] - s, nxt_c[s:e] - s,

@@ -23,16 +23,14 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.batch_sim import reuse_distances_fast, simulate_many
-from repro.core.mrc import HitRatioFunction, build_hit_ratio_function
-from repro.core.partitioner import (PartitionResult, greedy_allocate,
-                                    pgd_solve, two_level_solve)
-from repro.core.reuse_distance import (RDResult, reuse_distances,
-                                       sampled_reuse_distances,
-                                       urd_cache_blocks)
+from repro.core.batch_sim import simulate_many
+from repro.core.monitor import analyze_windows
+from repro.core.mrc import HitRatioFunction
+from repro.core.partitioner import (PartitionResult, pgd_solve,
+                                    two_level_solve)
 from repro.core.simulator import LRUCache, SimResult, simulate
 from repro.core.trace import Trace
-from repro.core.write_policy import WritePolicy, write_ratio
+from repro.core.write_policy import WritePolicy
 
 __all__ = ["TenantState", "AnalyzerDecision", "ECICacheManager"]
 
@@ -103,6 +101,20 @@ class ECICacheManager:
     default ``capacity2 == 0`` everything reduces bit-identically to the
     single-level scheme.
 
+    ``sample_rate`` selects the Monitor's SHARDS spatial sampling: ``None``
+    (exact), a float rate, or ``"auto"`` (per-tenant rate tuned to
+    ``sample_target`` kept accesses, floored at ``sample_floor`` — see
+    ``auto_sample_rate``).  Deployments with at least
+    ``auto_sample_tenants`` tenants default to ``"auto"`` when
+    ``sample_rate`` is left ``None`` — at thousand-tenant scale the control
+    plane monitors on sampled traces by default, with per-tenant error bars
+    reported by the monitor; smaller setups (every paper-figure
+    reproduction) stay exact and bit-identical.  Either way the whole
+    Analyzer runs through the fused batched monitor
+    (``repro.core.monitor.analyze_windows``): one stack-distance pass and
+    batched curve/write-ratio reductions for all tenants, no per-tenant
+    Python loop.
+
     ``history_limit`` bounds the retained ``AnalyzerDecision`` list (a
     long-running serving deployment analyzes every Δt forever; unbounded
     history is a leak).  ``None`` keeps everything.
@@ -113,14 +125,16 @@ class ECICacheManager:
                  t_fast: float = 1.0, t_slow: float = 20.0,
                  t_write_bypass: float | None = None, flush_cost: float = 0.0,
                  rd_kind: str = "urd", adaptive_policy: bool = True,
-                 sample_rate: float | None = None,
+                 sample_rate: float | str | None = None,
                  initial_blocks: int | None = None,
                  percentile: float = 100.0,
                  partition_fn: Callable = pgd_solve,
                  engine: str = "batch",
                  capacity2: int = 0, t_fast2: float | None = None,
                  w_threshold2: float = 0.3,
-                 history_limit: int | None = 256):
+                 history_limit: int | None = 256,
+                 sample_target: int = 4096, sample_floor: int = 256,
+                 auto_sample_tenants: int = 256):
         if engine not in ("batch", "lru"):
             raise ValueError(f"engine must be 'batch' or 'lru', got {engine!r}")
         self.capacity = int(capacity)
@@ -136,6 +150,9 @@ class ECICacheManager:
         self.rd_kind = rd_kind
         self.adaptive_policy = adaptive_policy
         self.sample_rate = sample_rate
+        self.sample_target = int(sample_target)
+        self.sample_floor = int(sample_floor)
+        self.auto_sample_tenants = int(auto_sample_tenants)
         self.percentile = percentile
         self.partition_fn = partition_fn
         self.engine = engine
@@ -143,6 +160,9 @@ class ECICacheManager:
         self.tenants = [TenantState(n, LRUCache(init)) for n in tenant_names]
         self.history: collections.deque[AnalyzerDecision] = \
             collections.deque(maxlen=history_limit)
+        self.windows_analyzed = 0       # also salts the SHARDS hash per window
+        self.tenant_windows = 0         # replayed tenant-windows (denominator)
+        self.ro_fallback_windows = 0    # two-level RO interpreter fallbacks
 
     # ------------------------------------------------------------- Monitor
     def record(self, tenant: int, addrs: np.ndarray, is_read: np.ndarray) -> None:
@@ -158,49 +178,47 @@ class ECICacheManager:
         t.cache2.resize(0)
 
     # ------------------------------------------------------------ Analyzer
-    def _rd(self, trace: Trace) -> RDResult:
-        if self.sample_rate is not None and len(trace) > 0:
-            return sampled_reuse_distances(trace, self.rd_kind, self.sample_rate)
-        return reuse_distances_fast(trace, self.rd_kind)
+    def effective_sample_rate(self) -> float | str | None:
+        """Resolve the Monitor's sampling mode for the current deployment."""
+        if self.sample_rate is None \
+                and len(self.tenants) >= self.auto_sample_tenants:
+            return "auto"
+        return self.sample_rate
 
     def analyze(self, window_trd: dict[int, np.ndarray] | None = None
                 ) -> AnalyzerDecision:
         """Alg. 1 / Alg. 4: run at every Δt window boundary.
 
-        ``window_trd`` optionally carries per-tenant raw TRD sample arrays
-        already computed by the batch engine's counting pass (identical to
-        ``reuse_distances(trace, "trd").distances``); reuse them instead of
-        re-deriving distances from scratch.
+        All active tenants are analyzed in one fused pass
+        (``analyze_windows``): one stack-distance counting pass over the
+        concatenated window tape, batched curve construction, batched
+        Alg.-3 write ratios — optionally SHARDS-sampled (see the class
+        docstring).  ``window_trd`` optionally carries per-tenant raw TRD
+        sample arrays already computed by the batch engine's counting pass
+        (identical to ``reuse_distances(trace, "trd").distances``); the
+        exact path reuses them instead of re-counting.
         """
         window_trd = window_trd or {}
-        hs: list[HitRatioFunction] = []
-        for i, t in enumerate(self.tenants):
-            if not t.active:
-                continue
-            tr = t.window_trace()
-            raw = window_trd.get(i)
-            if raw is not None and self.sample_rate is None:
-                d = raw if self.rd_kind == "trd" else \
-                    np.where(tr.is_read, raw, -1)
-                rd = RDResult(d, self.rd_kind)
-            else:
-                raw = None
-                rd = self._rd(tr)
-            t.h_fn = build_hit_ratio_function(rd)
-            t.urd_size = urd_cache_blocks(rd, self.percentile)
-            hs.append(t.h_fn)
+        act = [i for i, t in enumerate(self.tenants) if t.active]
+        traces = [self.tenants[i].window_trace() for i in act]
+        rate = self.effective_sample_rate()
+        pre = ([window_trd.get(i) for i in act] if rate is None else None)
+        mon = analyze_windows(
+            traces, kind=self.rd_kind, percentile=self.percentile,
+            sample_rate=rate, window_seed=self.windows_analyzed,
+            sample_target=self.sample_target, sample_floor=self.sample_floor,
+            precomputed_trd=pre, tenant_ids=act)
+        self.windows_analyzed += 1
+        for k, i in enumerate(act):
+            t = self.tenants[i]
+            t.h_fn = mon.curves[k]
+            t.urd_size = int(mon.urd_sizes[k])
             if self.adaptive_policy:
-                if raw is not None:
-                    # Alg. 3 writeRatio = (WAW + WAR)/n: write re-touches
-                    # are exactly the writes with a TRD sample
-                    n = max(len(tr), 1)
-                    wr = float(np.sum((raw >= 0) & ~tr.is_read)) / n
-                    t.policy = (WritePolicy.RO if wr >= self.w_threshold
-                                else WritePolicy.WB)
-                else:
-                    wr = write_ratio(tr)
-                    t.policy = (WritePolicy.RO if wr >= self.w_threshold
-                                else WritePolicy.WB)
+                # Alg. 3 writeRatio = (WAW + WAR)/n: write re-touches are
+                # exactly the writes with a TRD sample
+                wr = float(mon.write_ratios[k])
+                t.policy = (WritePolicy.RO if wr >= self.w_threshold
+                            else WritePolicy.WB)
                 if self.capacity2 > 0:
                     # per-level Alg. 3: the larger endurance-sensitive L2
                     # switches to the clean policy at a stricter threshold
@@ -208,8 +226,9 @@ class ECICacheManager:
                                  else WritePolicy.WB)
 
         part, part2 = two_level_solve(
-            hs, self.capacity, self.capacity2, self.t_fast, self.t_fast2,
-            self.t_slow, c_min=self.c_min, partition_fn=self.partition_fn)
+            mon.curves, self.capacity, self.capacity2, self.t_fast,
+            self.t_fast2, self.t_slow, c_min=self.c_min,
+            partition_fn=self.partition_fn)
 
         sizes_full = np.zeros(len(self.tenants), dtype=np.int64)
         sizes2_full = np.zeros(len(self.tenants), dtype=np.int64)
@@ -251,6 +270,7 @@ class ECICacheManager:
         agg.read_hits_l2 += res.read_hits_l2
         agg.write_hits_l2 += res.write_hits_l2
         agg.cache_writes_l2 += res.cache_writes_l2
+        agg.fallback += res.fallback
         agg.capacity = t.cache.capacity
         agg.capacity2 = t.cache2.capacity
         agg.policy = t.policy.value
@@ -287,6 +307,7 @@ class ECICacheManager:
             window_trd = {i: rd for i, rd in zip(idx, rds) if rd is not None}
             for i, res in zip(idx, results):
                 self._accumulate(self.tenants[i], res)
+            self.ro_fallback_windows += sum(r.fallback for r in results)
         else:
             for i in idx:
                 t = self.tenants[i]
@@ -297,6 +318,7 @@ class ECICacheManager:
                                capacity2=t.cache2.capacity, policy2=t.policy2,
                                t_fast2=self.t_fast2, cache2=t.cache2)
                 self._accumulate(t, res)
+        self.tenant_windows += len(idx)
         decision = self.analyze(window_trd)
         self.actuate(decision)
 
@@ -327,4 +349,8 @@ class ECICacheManager:
             "allocated_blocks_l2": int(self.allocated_sizes2().sum()),
             "read_hit_ratio_l2": (sum(r.read_hits_l2 for r in res)
                                   / max(sum(r.reads for r in res), 1)),
+            # batch-engine telemetry: tenant-windows replayed through the
+            # two-level RO interpreter fallback, over all replayed windows
+            "ro_fallback_windows": self.ro_fallback_windows,
+            "tenant_windows": self.tenant_windows,
         }

@@ -1,0 +1,241 @@
+"""Fused multi-tenant Monitor/Analyzer — one counting pass for all tenants.
+
+``ECICacheManager.analyze`` used to loop tenants in Python: a reuse-distance
+pass, ``build_hit_ratio_function`` and the Alg.-3 write ratio per tenant, so
+the control plane — not the simulated I/O — dominated at the ROADMAP's
+thousand-tenant scale.  ``analyze_windows`` replaces that loop with batched
+array code end to end:
+
+  * **One tape.**  All tenants' Δt window traces are concatenated into a
+    single access tape with per-tenant segment offsets.  Occurrence links
+    are severed at segment boundaries and ``nxt`` is clamped to the segment
+    end, so one merge-tree stack-distance pass (``batch_sim``'s
+    ``_stack_distances_host`` / the ``cache_sim`` kernel on TPU) yields
+    every tenant's exact window reuse distances at once — the cross-segment
+    dominance contributions provably cancel (a clamped link never reaches
+    into the next segment).
+  * **Segment reductions.**  URD/TRD sample histograms, hit-ratio curves
+    (``build_hit_ratio_functions``: one lexsort for all tenants, stacked
+    breakpoint arrays), Alg.-3 write ratios (re-touch writes per tenant =
+    one ``bincount``) and URD-based sizes all come from the same pass — no
+    per-tenant Python loop anywhere.
+  * **SHARDS end-to-end.**  With ``sample_rate`` set (a float, or
+    ``"auto"`` for the target-sample-count tuner) the tape is spatially
+    filtered *before* counting — hash salts are seed-stabilized per
+    (tenant, window) via ``shards_salt`` — distances are scaled by 1/rate,
+    curve heights use the Horvitz–Thompson estimator, and per-tenant
+    expected-error bars (~1/sqrt(kept)) are reported.  Write ratios are
+    estimated on the sampled sub-trace: spatial sampling keeps every access
+    of a kept address, so the re-touch classification is exact per address
+    and the ratio is unbiased.
+  * **Precomputed distances.**  The batch replay engine already counts the
+    window's stack distances; ``precomputed_trd`` forwards those raw TRD
+    arrays so the exact path never re-counts what ``simulate_many`` just
+    measured.
+
+Exactness: on the exact path (``sample_rate=None``) every curve, URD size
+and write ratio is bit-identical to the per-tenant seed code — property
+tested in ``tests/test_monitor_scale.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.batch_sim import _accel_default, _stack_distances_host
+from repro.core.mrc import BatchedHitRatioFunctions, build_hit_ratio_functions
+from repro.core.reuse_distance import (auto_sample_rate, shards_keep_mask,
+                                       shards_salt)
+from repro.core.trace import Trace
+
+__all__ = ["MonitorResult", "analyze_windows"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MonitorResult:
+    """Per-tenant Analyzer outputs for one Δt window, batched.
+
+    curves: stacked hit-ratio step functions (sequence of
+      ``HitRatioFunction`` views; feed directly to the partitioners).
+    urd_sizes: int64[N] — ``calculateURDbasedSize`` per tenant (at the
+      requested percentile; sampled path: from the scaled distances).
+    write_ratios: float64[N] — Alg. 3 ``(WAW + WAR) / n`` per tenant
+      (sampled path: unbiased estimate from the kept sub-trace).
+    sample_rates: float64[N] — effective SHARDS rate per tenant (1.0 exact).
+    expected_errors: float64[N] — expected absolute curve error
+      (~1/sqrt(kept accesses)); 0.0 on the exact path.
+    kind: "urd" | "trd".
+    """
+
+    curves: BatchedHitRatioFunctions
+    urd_sizes: np.ndarray
+    write_ratios: np.ndarray
+    sample_rates: np.ndarray
+    expected_errors: np.ndarray
+    kind: str
+
+
+def _segment_links(addrs: np.ndarray, tid: np.ndarray,
+                   bounds: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """prev/next occurrence links on a multi-tenant tape, severed at
+    segment boundaries; ``nxt`` clamped to the owning segment's end."""
+    m = addrs.shape[0]
+    lo = int(addrs.min(initial=0))
+    big = int(addrs.max(initial=0)) + 1 - min(lo, 0)
+    n_seg = int(tid[-1]) + 1 if m else 1
+    if lo < 0 or n_seg * big >= 2**62:       # composite key would overflow
+        order = np.lexsort((addrs, tid))
+    else:
+        order = np.argsort(tid * big + addrs, kind="stable")
+    sa, st = addrs[order], tid[order]
+    same = np.zeros(m, dtype=bool)
+    same[1:] = (sa[1:] == sa[:-1]) & (st[1:] == st[:-1])
+    prev = np.full(m, -1, dtype=np.int64)
+    prev[order[1:]] = np.where(same[1:], order[:-1], -1)
+    nxt = np.full(m, m, dtype=np.int64)
+    nxt[order[:-1]] = np.where(same[1:], order[1:], m)
+    end_of = np.repeat(bounds[1:], np.diff(bounds))
+    return prev, np.minimum(nxt, end_of)
+
+
+def _sd_pass(prev: np.ndarray, nxt_c: np.ndarray, backend: str) -> np.ndarray:
+    """One stack-distance counting pass over the whole tape."""
+    if backend == "auto":
+        backend = "accel" if _accel_default() else "host"
+    if backend == "accel":
+        from repro.kernels.cache_sim.ops import stack_distances_segments_accel
+        return stack_distances_segments_accel(prev, nxt_c)
+    return _stack_distances_host(prev, nxt_c)
+
+
+def _urd_sizes(dist: np.ndarray, tid: np.ndarray, n_tenants: int,
+               bounds: np.ndarray, percentile: float,
+               curves: BatchedHitRatioFunctions) -> np.ndarray:
+    """Batched ``urd_cache_blocks`` (max sample + 1, or percentile)."""
+    if percentile >= 100.0:
+        # max sample + 1 == the curve's largest breakpoint, already stacked
+        return curves.max_useful_sizes.astype(np.int64).copy()
+    out = np.zeros(n_tenants, dtype=np.int64)
+    for i in range(n_tenants):                   # rare config; no recount
+        seg = dist[bounds[i]:bounds[i + 1]]
+        s = seg[seg >= 0]
+        if s.size:
+            out[i] = int(np.percentile(s, percentile)) + 1
+    return out
+
+
+def analyze_windows(traces: list[Trace], kind: str = "urd",
+                    percentile: float = 100.0,
+                    sample_rate: float | str | None = None,
+                    window_seed: int = 0,
+                    sample_target: int = 4096, sample_floor: int = 256,
+                    precomputed_trd: list[np.ndarray | None] | None = None,
+                    tenant_ids: list[int] | None = None,
+                    backend: str = "auto") -> MonitorResult:
+    """Analyze every tenant's Δt window in one fused pass (see module doc).
+
+    ``precomputed_trd[i]`` (exact path only) carries tenant i's raw
+    window-internal TRD sample array from the batch replay engine; missing
+    entries are counted here.  ``tenant_ids`` stabilizes the per-tenant
+    SHARDS salts under tenant retirement (defaults to positional ids).
+    """
+    if kind not in ("trd", "urd"):
+        raise ValueError(f"kind must be 'trd' or 'urd', got {kind!r}")
+    n = len(traces)
+    lens = np.array([len(t) for t in traces], dtype=np.int64)
+    bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    m = int(bounds[-1])
+    ids = np.asarray(tenant_ids if tenant_ids is not None else range(n),
+                     dtype=np.int64)
+
+    if sample_rate is None:
+        # ------------------------------------------------------ exact path
+        is_read = (np.concatenate([t.is_read for t in traces]) if m
+                   else np.zeros(0, bool))
+        tid = np.repeat(np.arange(n, dtype=np.int64), lens)
+        pre = precomputed_trd or []
+        dist = np.full(m, -1, dtype=np.int64)
+        need = []
+        for i in range(n):
+            raw = pre[i] if i < len(pre) else None
+            if raw is not None:
+                dist[bounds[i]:bounds[i + 1]] = raw
+            elif lens[i] > 0:
+                need.append(i)
+        if need:
+            # only the tenants without precomputed distances hit the
+            # counting pass (no tape is built at all when every window
+            # came through the batch replay engine)
+            if len(need) == n:
+                sel = np.ones(m, dtype=bool)
+            else:
+                sel = np.zeros(m, dtype=bool)
+                for i in need:
+                    sel[bounds[i]:bounds[i + 1]] = True
+            addrs = np.concatenate([t.addrs for t in traces])
+            sub_addr = addrs[sel]
+            sub_tid = tid[sel]
+            sub_lens = np.bincount(sub_tid, minlength=n)[need]
+            sub_bounds = np.concatenate([[0], np.cumsum(sub_lens)])
+            # compact tenant ids so segment ends line up on the sub-tape
+            remap = np.zeros(n, dtype=np.int64)
+            remap[need] = np.arange(len(need))
+            prev, nxt_c = _segment_links(sub_addr, remap[sub_tid],
+                                         sub_bounds.astype(np.int64))
+            dist[sel] = _sd_pass(prev, nxt_c, backend)
+        hot_w = (dist >= 0) & ~is_read
+        wr = (np.bincount(tid[hot_w], minlength=n)
+              / np.maximum(lens, 1))
+        if kind == "urd":
+            dist = np.where(is_read, dist, -1)
+        curves = build_hit_ratio_functions(dist, tid, n, lens)
+        urd = _urd_sizes(dist, tid, n, bounds, percentile, curves)
+        return MonitorResult(curves, urd, wr, np.ones(n),
+                             np.zeros(n), kind)
+
+    # -------------------------------------------------------- sampled path
+    if sample_rate == "auto":
+        rates = np.array([auto_sample_rate(int(nl), sample_target,
+                                           sample_floor) for nl in lens])
+    else:
+        r = float(sample_rate)
+        if not (0 < r <= 1):
+            raise ValueError("sample_rate must be in (0, 1] or 'auto'")
+        rates = np.full(n, r)
+    # spatial filter per tenant (seed-stabilized salt per (tenant, window));
+    # only the kept sub-tape is ever concatenated — the Monitor's ingest
+    # never materializes a full-window tape on the sampled path
+    keeps = [shards_keep_mask(t.addrs, float(rates[i]),
+                              shards_salt(window_seed, int(ids[i])))
+             for i, t in enumerate(traces)]
+    kept = np.array([int(k.sum()) for k in keeps], dtype=np.int64)
+    sub_bounds = np.concatenate([[0], np.cumsum(kept)]).astype(np.int64)
+    if int(kept.sum()):
+        addrs_s = np.concatenate(
+            [t.addrs[k] for t, k in zip(traces, keeps)])
+        read_s = np.concatenate(
+            [t.is_read[k] for t, k in zip(traces, keeps)])
+    else:
+        addrs_s = np.zeros(0, np.int64)
+        read_s = np.zeros(0, bool)
+    tid_s = np.repeat(np.arange(n, dtype=np.int64), kept)
+    prev, nxt_c = _segment_links(addrs_s, tid_s, sub_bounds)
+    sd = _sd_pass(prev, nxt_c, backend)
+    rate_s = rates[tid_s]
+    dist = np.where(sd >= 0, np.round(sd / np.maximum(rate_s, 1e-300)
+                                      ).astype(np.int64), -1)
+    hot_w = (dist >= 0) & ~read_s
+    wr = np.bincount(tid_s[hot_w], minlength=n) / np.maximum(kept, 1)
+    if kind == "urd":
+        dist = np.where(read_s, dist, -1)
+    curves = build_hit_ratio_functions(dist, tid_s, n, lens, rates=rates)
+    urd = _urd_sizes(dist, tid_s, n, sub_bounds, percentile, curves)
+    # error bars scale with the kept *distinct* addresses (= cold accesses
+    # of the sub-tape): curve noise is binomial over surviving addresses
+    distinct = np.bincount(tid_s[prev < 0], minlength=n)
+    errors = np.where(rates < 1.0,
+                      np.minimum(1.0,
+                                 1.0 / np.sqrt(np.maximum(distinct, 1))),
+                      0.0)
+    return MonitorResult(curves, urd, wr, rates, errors, kind)

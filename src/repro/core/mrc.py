@@ -19,7 +19,8 @@ import numpy as np
 
 from repro.core.reuse_distance import RDResult
 
-__all__ = ["HitRatioFunction", "build_hit_ratio_function"]
+__all__ = ["HitRatioFunction", "BatchedHitRatioFunctions",
+           "build_hit_ratio_function", "build_hit_ratio_functions"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +100,11 @@ def build_hit_ratio_function(rd: RDResult, n_accesses: int | None = None,
 
     An access with sampled distance d hits an LRU cache of size c iff
     d + 1 <= c.  Cold accesses and (for URD) write re-touches never hit.
+
+    For SHARDS-sampled results (``rd.rate < 1``) each kept sample stands
+    for ``1/rate`` accesses, so plateau heights are scaled back up
+    (Horvitz–Thompson) and clipped at 1; the exact path (``rate == 1``)
+    is numerically untouched.
     """
     samples = rd.samples
     n = int(n_accesses if n_accesses is not None else rd.distances.shape[0])
@@ -112,7 +118,188 @@ def build_hit_ratio_function(rd: RDResult, n_accesses: int | None = None,
             return HitRatioFunction(np.array([0], dtype=np.int64),
                                     np.array([0.0]), n)
     sizes, counts = np.unique(samples + 1, return_counts=True)
-    heights = np.cumsum(counts) / n
+    if rd.rate < 1.0:
+        heights = np.minimum(np.cumsum(counts) / (n * rd.rate), 1.0)
+    else:
+        heights = np.cumsum(counts) / n
     edges = np.concatenate([[0], sizes]).astype(np.int64)
     heights_full = np.concatenate([[0.0], heights])
     return HitRatioFunction(edges, heights_full, n)
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchedHitRatioFunctions:
+    """N hit-ratio step curves backed by stacked breakpoint arrays.
+
+    The fused monitor and the vectorized partitioner operate on this store
+    directly — evaluation, residual shifting and breakpoint walks are single
+    array programs over all tenants.  It also behaves as a read-only
+    sequence of :class:`HitRatioFunction` views, so every legacy
+    ``partition_fn`` (pgd, static, reuse-intensity) keeps working unchanged.
+
+    Layout: curve ``i`` owns ``edges[offsets[i]:offsets[i+1]]`` (int64,
+    starts at 0, strictly increasing) and the matching ``heights`` slice
+    (same length: ``heights[k]`` is the plateau on ``[edges[k],
+    edges[k+1])``).
+    """
+
+    edges: np.ndarray       # int64[M] concatenated breakpoint sizes
+    heights: np.ndarray     # float64[M] concatenated plateau values
+    offsets: np.ndarray     # int64[N+1] curve boundaries into edges/heights
+    n_accesses: np.ndarray  # int64[N] per-curve denominators
+
+    def __len__(self) -> int:
+        return int(self.n_accesses.shape[0])
+
+    def __getitem__(self, i: int) -> HitRatioFunction:
+        i = range(len(self))[int(i)]         # normalize negative indices
+        o, o2 = int(self.offsets[i]), int(self.offsets[i + 1])
+        return HitRatioFunction(self.edges[o:o2], self.heights[o:o2],
+                                int(self.n_accesses[i]))
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self[i]
+
+    @classmethod
+    def from_curves(cls, hs) -> "BatchedHitRatioFunctions":
+        """Stack a list of curves (no-op passthrough if already batched)."""
+        if isinstance(hs, cls):
+            return hs
+        hs = list(hs)
+        if not hs:
+            return cls(np.zeros(0, np.int64), np.zeros(0, np.float64),
+                       np.zeros(1, np.int64), np.zeros(0, np.int64))
+        parts_e, parts_h = [], []
+        for h in hs:
+            e = np.asarray(h.edges, np.int64)
+            v = np.asarray(h.heights, np.float64)
+            if v.shape[0] < e.shape[0]:      # tolerate the k+1/k layout
+                v = np.concatenate([v, np.repeat(v[-1:], e.shape[0] - v.shape[0])])
+            parts_e.append(e)
+            parts_h.append(v[:e.shape[0]])
+        lens = np.array([p.shape[0] for p in parts_e], np.int64)
+        offsets = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+        return cls(np.concatenate(parts_e), np.concatenate(parts_h), offsets,
+                   np.array([h.n_accesses for h in hs], np.int64))
+
+    # ------------------------------------------------------------ queries
+    @property
+    def max_useful_sizes(self) -> np.ndarray:
+        """int64[N]: each curve's smallest saturating size (URD sizes)."""
+        return self.edges[self.offsets[1:] - 1]
+
+    @property
+    def max_hit_ratios(self) -> np.ndarray:
+        return self.heights[self.offsets[1:] - 1]
+
+    def _composite(self, queries: np.ndarray) -> np.ndarray:
+        """Global insertion positions of per-curve queries (side='right')."""
+        lens = np.diff(self.offsets)
+        big = int(self.edges.max(initial=0)) + 2
+        seg = np.repeat(np.arange(len(self), dtype=np.int64), lens)
+        q = np.minimum(np.maximum(queries, 0), big - 1)
+        return np.searchsorted(seg * big + self.edges,
+                               np.arange(len(self), dtype=np.int64) * big + q,
+                               side="right")
+
+    def evaluate(self, sizes: np.ndarray) -> np.ndarray:
+        """Vectorized ``h_i(sizes[i])`` for all curves — one searchsorted.
+
+        Bit-identical to calling each :class:`HitRatioFunction` view (same
+        index arithmetic, same stored plateau floats).
+        """
+        c = np.asarray(sizes)
+        if len(self) == 0:
+            return np.zeros(0, np.float64)
+        lens = np.diff(self.offsets)
+        idx = np.clip(self._composite(c) - 1 - self.offsets[:-1], 0, lens - 1)
+        out = self.heights[self.offsets[:-1] + idx]
+        return np.where(c <= 0, 0.0, out)
+
+    def shifted(self, bases: np.ndarray) -> "BatchedHitRatioFunctions":
+        """Vectorized residual curves ``h~_i(c) = h_i(base_i + c) − h_i(base_i)``.
+
+        Matches ``HitRatioFunction.shifted`` per curve bit-for-bit (same
+        searchsorted split, same float subtractions) — the level-2 stage of
+        ``two_level_solve`` runs on this without any per-tenant loop.
+        """
+        b = np.maximum(np.asarray(bases, np.int64), 0)
+        n = len(self)
+        if n == 0:
+            return self
+        lens = np.diff(self.offsets)
+        k = self._composite(b) - self.offsets[:-1]          # per-curve split
+        h0 = np.where(b > 0, self.evaluate(b),
+                      self.heights[self.offsets[:-1]])
+        tail = lens - k                                      # kept breakpoints
+        new_lens = tail + 1                                  # +1 for the 0 head
+        new_off = np.concatenate([[0], np.cumsum(new_lens)]).astype(np.int64)
+        edges = np.zeros(int(new_off[-1]), np.int64)
+        heights = np.zeros(int(new_off[-1]), np.float64)
+        total = int(tail.sum())
+        if total:
+            rank = (np.arange(total, dtype=np.int64)
+                    - np.repeat(np.cumsum(tail) - tail, tail))
+            src = np.repeat(self.offsets[:-1] + k, tail) + rank
+            dst = np.repeat(new_off[:-1] + 1, tail) + rank
+            edges[dst] = self.edges[src] - np.repeat(b, tail)
+            heights[dst] = self.heights[src] - np.repeat(h0, tail)
+        return BatchedHitRatioFunctions(edges, heights, new_off,
+                                        self.n_accesses.copy())
+
+
+def build_hit_ratio_functions(dist: np.ndarray, tid: np.ndarray,
+                              n_tenants: int, n_accesses: np.ndarray,
+                              rates: np.ndarray | None = None
+                              ) -> BatchedHitRatioFunctions:
+    """Batched ``build_hit_ratio_function``: every tenant in one lexsort.
+
+    ``dist`` holds all tenants' reuse-distance samples concatenated (-1 =
+    no sample), ``tid`` the tenant id per position.  Per-(tenant, size)
+    counts come from one lexsort + segmented reductions, so no per-tenant
+    Python work happens; plateau heights are the same integer cumsums over
+    the same denominators as the per-tenant constructor (bit-identical on
+    the exact path).  ``rates`` (per-tenant SHARDS rates) switches the
+    heights to the scaled-and-clipped sampled estimator.
+    """
+    n_acc = np.maximum(np.asarray(n_accesses, np.int64), 1)
+    mask = dist >= 0
+    s = dist[mask] + 1
+    t = tid[mask]
+    if s.size:
+        order = np.lexsort((s, t))
+        ss, ts = s[order], t[order]
+        new = np.ones(ss.size, dtype=bool)
+        new[1:] = (ss[1:] != ss[:-1]) | (ts[1:] != ts[:-1])
+        uidx = np.flatnonzero(new)
+        sizes_u, t_u = ss[uidx], ts[uidx]
+        counts = np.diff(np.append(uidx, ss.size))
+        csum = np.cumsum(counts)
+        head = np.ones(t_u.size, dtype=bool)
+        head[1:] = t_u[1:] != t_u[:-1]
+        starts = np.flatnonzero(head)
+        seg_lens = np.diff(np.append(starts, t_u.size))
+        base = np.repeat(csum[starts] - counts[starts], seg_lens)
+        cum_in = csum - base                  # within-tenant cumulative counts
+    else:
+        sizes_u = np.zeros(0, np.int64)
+        t_u = np.zeros(0, np.int64)
+        cum_in = np.zeros(0, np.int64)
+        starts = np.zeros(0, np.int64)
+        seg_lens = np.zeros(0, np.int64)
+    k_per = np.bincount(t_u, minlength=n_tenants)
+    off = np.concatenate([[0], np.cumsum(k_per + 1)]).astype(np.int64)
+    edges = np.zeros(int(off[-1]), np.int64)
+    heights = np.zeros(int(off[-1]), np.float64)
+    if s.size:
+        rank = (np.arange(t_u.size, dtype=np.int64)
+                - np.repeat(starts, seg_lens))
+        dst = off[t_u] + 1 + rank
+        edges[dst] = sizes_u
+        if rates is None:
+            heights[dst] = cum_in / n_acc[t_u]
+        else:
+            r = np.asarray(rates, np.float64)
+            heights[dst] = np.minimum(cum_in / (n_acc[t_u] * r[t_u]), 1.0)
+    return BatchedHitRatioFunctions(edges, heights, off, n_acc)

@@ -13,19 +13,35 @@ hit-ratio functions.  We provide:
     MRC-partitioning procedure (Centaur's convex-hull walk).  Near-optimal:
     exact on the concave hull, with at most a one-breakpoint knapsack
     rounding gap at tight capacities.  Deterministic, no MATLAB.
+
+    The default ``method="fast"`` is a *vectorized breakpoint walk*: every
+    tenant's (Δh/Δc density, Δc) steps are materialized as arrays, each
+    chain is reduced to its prefix-min density envelope (the order the heap
+    consumes a chain: a cheap step blocks its better successors, so a
+    chain's effective priority is the running minimum), one argsort merges
+    all chains, and a prefix sum over Δc finds the budget cut — O(K log K)
+    array work for K breakpoints total, no Python inner loop.  The grant
+    order — hence the allocation — is **bit-identical** to the retained
+    ``method="heap"`` oracle (property-tested), including the partial grant
+    of the first step past the budget.
   * ``pgd_solve``        — projected-gradient descent in JAX on the
     piecewise-linear relaxation of H_i, with a Dykstra-style projection onto
     { sum c <= C } ∩ box.  This is the faithful "fmincon analog"; tests check
     it matches greedy within the relaxation gap.
 
-Both return allocations in *blocks* (pages).
+Both return allocations in *blocks* (pages).  All entry points accept a
+plain list of ``HitRatioFunction`` or the fused monitor's
+``BatchedHitRatioFunctions`` store (stacked breakpoint arrays; zero-copy
+for the vectorized paths).
 
 ``two_level_solve`` adds ETICA's second capacity constraint: level 1
 (HBM blocks) is sized by the single-level problem, then level 2 (host-DRAM
 blocks) solves the *same* Eq. 2 on the residual hit-ratio curves
 ``h~_i(c) = h_i(c1_i + c)`` with service time ``t_fast2`` — exact because
 the exclusive hierarchy's union is one LRU stack (see ``batch_sim``), so
-L2 hits are precisely the reuses in ``[c1_i, c1_i + c2_i)``.
+L2 hits are precisely the reuses in ``[c1_i, c1_i + c2_i)``.  With batched
+curves the residual shift is vectorized too, so both levels stay on the
+fast path.
 """
 from __future__ import annotations
 
@@ -36,7 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mrc import HitRatioFunction
+from repro.core.mrc import BatchedHitRatioFunctions, HitRatioFunction
 
 __all__ = ["PartitionResult", "greedy_allocate", "pgd_solve",
            "aggregate_latency", "two_level_solve"]
@@ -50,39 +66,50 @@ class PartitionResult:
     hit_ratios: np.ndarray     # float64[N] at `sizes`
 
 
-def aggregate_latency(hs: list[HitRatioFunction], sizes: np.ndarray,
+def _hit_ratios_at(hs, sizes: np.ndarray) -> np.ndarray:
+    """Vectorized ``[h_i(sizes_i)]`` via the stacked-curve store."""
+    return BatchedHitRatioFunctions.from_curves(hs).evaluate(
+        np.asarray(sizes))
+
+
+def aggregate_latency(hs, sizes: np.ndarray,
                       t_fast: float, t_slow: float,
                       weights: np.ndarray | None = None) -> float:
-    """Paper Eq. 2 objective at an allocation."""
+    """Paper Eq. 2 objective at an allocation (vectorized over tenants)."""
     w = np.ones(len(hs)) if weights is None else np.asarray(weights, float)
-    total = 0.0
-    for i, h in enumerate(hs):
-        hr = h(int(sizes[i]))
-        total += w[i] * (hr * t_fast + (1.0 - hr) * t_slow)
-    return float(total)
+    hr = _hit_ratios_at(hs, sizes)
+    return float(np.sum(w * (hr * t_fast + (1.0 - hr) * t_slow)))
 
 
-def greedy_allocate(hs: list[HitRatioFunction], capacity: int,
+def greedy_allocate(hs, capacity: int,
                     t_fast: float, t_slow: float,
                     c_min: int = 0,
-                    weights: np.ndarray | None = None) -> PartitionResult:
+                    weights: np.ndarray | None = None,
+                    method: str = "fast") -> PartitionResult:
     """Breakpoint-greedy partitioner (the discrete reference optimizer).
 
     Feasible case (paper Alg. 1 line 8): if the URD-based sizes all fit,
     allocate them outright.  Otherwise walk breakpoints by best
-    Δlatency/Δblocks until capacity is exhausted.
+    Δlatency/Δblocks until capacity is exhausted.  ``method="fast"``
+    (default) runs the vectorized breakpoint walk, ``"heap"`` the original
+    one-pop-at-a-time loop — both produce bit-identical sizes (the heap is
+    retained as the oracle in tests and for the partial-grant semantics
+    reference).
     """
+    if method not in ("fast", "heap"):
+        raise ValueError(f"method must be 'fast' or 'heap', got {method!r}")
     n = len(hs)
     w = np.ones(n) if weights is None else np.asarray(weights, float)
-    urd_sizes = np.array([h.max_useful_size for h in hs], dtype=np.int64)
+    b = BatchedHitRatioFunctions.from_curves(hs)
+    urd_sizes = b.max_useful_sizes.astype(np.int64)
     c_min_arr = np.minimum(np.full(n, c_min, dtype=np.int64), urd_sizes)
 
     if int(urd_sizes.sum()) <= capacity:
         sizes = urd_sizes
         return PartitionResult(
             sizes, True,
-            aggregate_latency(hs, sizes, t_fast, t_slow, w),
-            np.array([h(int(s)) for h, s in zip(hs, sizes)]))
+            aggregate_latency(b, sizes, t_fast, t_slow, w),
+            b.evaluate(sizes))
 
     sizes = c_min_arr.copy()
     budget = capacity - int(sizes.sum())
@@ -92,6 +119,24 @@ def greedy_allocate(hs: list[HitRatioFunction], capacity: int,
         budget = capacity - int(sizes.sum())
 
     gain = t_slow - t_fast  # latency saved per unit hit-ratio
+    if method == "heap":
+        sizes = _greedy_walk_heap(hs, sizes, budget, urd_sizes, w, gain)
+    else:
+        sizes = _greedy_walk_fast(b, sizes, budget, w, gain)
+
+    return PartitionResult(
+        sizes, False,
+        aggregate_latency(b, sizes, t_fast, t_slow, w),
+        b.evaluate(sizes))
+
+
+def _greedy_walk_heap(hs, sizes: np.ndarray, budget: int,
+                      urd_sizes: np.ndarray, w: np.ndarray,
+                      gain: float) -> np.ndarray:
+    """The original heap inner loop: pop the densest next breakpoint,
+    grant it, push the tenant's following step.  O(K log K) with Python
+    constant factors — retained as the oracle for the fast walk."""
+    n = len(hs)
     heap: list[tuple[float, int, int, int, float]] = []
 
     def push(i: int) -> None:
@@ -115,11 +160,73 @@ def greedy_allocate(hs: list[HitRatioFunction], capacity: int,
         sizes[i] = nxt
         budget -= dc
         push(i)
+    return sizes
 
-    return PartitionResult(
-        sizes, False,
-        aggregate_latency(hs, sizes, t_fast, t_slow, w),
-        np.array([h(int(s)) for h, s in zip(hs, sizes)]))
+
+def _greedy_walk_fast(b: BatchedHitRatioFunctions, sizes: np.ndarray,
+                      budget: int, w: np.ndarray, gain: float) -> np.ndarray:
+    """Vectorized replay of the heap walk (bit-identical grant order).
+
+    Each tenant's chain of breakpoint steps must be consumed in curve
+    order, so a step's effective priority under "always pop the densest
+    head" is the prefix-min of densities along its chain; merging the
+    chains by (envelope desc, tenant, step) reproduces the heap's pop
+    sequence exactly (ties included: on equal density the heap compares
+    the tenant index next, and a chain's better-than-envelope successors
+    flush immediately after their blocking step either way).  A cumsum
+    over Δc then finds the budget cut and the partial-grant step.
+    """
+    n = len(b)
+    if budget <= 0 or n == 0:
+        return sizes
+    edges, heights, off = b.edges, b.heights, b.offsets
+    lens = np.diff(off)
+    # first step index per tenant (strictly above its current size)
+    k0 = b._composite(sizes) - off[:-1]
+    n_steps = np.maximum(lens - k0, 0)
+    total = int(n_steps.sum())
+    if total == 0:
+        return sizes
+    st_tid = np.repeat(np.arange(n, dtype=np.int64), n_steps)
+    rank = (np.arange(total, dtype=np.int64)
+            - np.repeat(np.cumsum(n_steps) - n_steps, n_steps))
+    gk = off[st_tid] + k0[st_tid] + rank          # breakpoint per step
+    h_cur0 = b.evaluate(sizes)                    # h at the starting sizes
+    first = rank == 0
+    dh = heights[gk] - np.where(first, h_cur0[st_tid], heights[gk - 1])
+    dc = edges[gk] - np.where(first, sizes[st_tid], edges[gk - 1])
+    # the heap stops a chain at its first non-improving step
+    bad = (dh <= 0).astype(np.int64)
+    cbad = np.cumsum(bad)
+    seg0 = np.repeat(np.cumsum(n_steps) - n_steps, n_steps)
+    valid = (cbad - cbad[seg0] + bad[seg0]) == 0
+    if not valid.any():
+        return sizes
+    st_tid, rank = st_tid[valid], rank[valid]
+    nxt_s, dc = edges[gk[valid]], dc[valid]
+    d = w[st_tid] * dh[valid] * gain / dc         # heap's density, same ops
+    # prefix-min envelope per chain (doubling scan: log K numpy passes)
+    nv = d.shape[0]
+    idx = np.arange(nv, dtype=np.int64)
+    head = np.ones(nv, dtype=bool)
+    head[1:] = st_tid[1:] != st_tid[:-1]
+    first_idx = np.maximum.accumulate(np.where(head, idx, 0))
+    e = d.copy()
+    shift = 1
+    while shift < nv:
+        can = idx - shift >= first_idx
+        prev_e = np.concatenate([np.full(shift, np.inf), e[:-shift]])
+        e = np.where(can, np.minimum(e, prev_e), e)
+        shift *= 2
+    order = np.lexsort((rank, st_tid, -e))
+    cum = np.cumsum(dc[order])
+    n_full = int(np.searchsorted(cum, budget, side="right"))
+    granted = order[:n_full]
+    np.maximum.at(sizes, st_tid[granted], nxt_s[granted])
+    rem = budget - (int(cum[n_full - 1]) if n_full else 0)
+    if rem > 0 and n_full < nv:                   # partial-grant tail
+        sizes[st_tid[order[n_full]]] += rem
+    return sizes
 
 
 def two_level_solve(hs: list[HitRatioFunction], capacity: int,
@@ -144,7 +251,10 @@ def two_level_solve(hs: list[HitRatioFunction], capacity: int,
     p1 = fn(hs, capacity, t_fast, t_slow, c_min=c_min, **kw)
     if capacity2 <= 0:
         return p1, None
-    shifted = [h.shifted(int(s)) for h, s in zip(hs, p1.sizes)]
+    if isinstance(hs, BatchedHitRatioFunctions):
+        shifted = hs.shifted(p1.sizes)       # vectorized residual curves
+    else:
+        shifted = [h.shifted(int(s)) for h, s in zip(hs, p1.sizes)]
     p2 = fn(shifted, capacity2, t_fast2, t_slow, c_min=0, **kw)
     return p1, p2
 

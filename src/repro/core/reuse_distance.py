@@ -26,10 +26,24 @@ Engines:
   * ``sampled_reuse_distances``    — SHARDS-style spatial sampling
                                 (hash(addr) < R): unbiased scaled histograms
                                 at O(n · s) cost for monitor scalability.
+                                The filtered sub-trace is measured by the
+                                vectorized ``reuse_distances_fast`` engine
+                                (``batch_sim``), the salt is a deterministic
+                                function of ``seed`` so a (tenant, window)
+                                pair always samples the same address subset,
+                                ``rate="auto"`` tunes the rate to a target
+                                sample count, and the returned ``RDResult``
+                                carries the rate plus an expected-error bar
+                                (Waldspurger et al., FAST'15: error shrinks
+                                like 1/sqrt(kept samples)).
+
+The fused thousand-tenant path (all tenants' windows analyzed in one
+counting pass, exact or sampled) lives in ``repro.core.monitor``.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -37,9 +51,12 @@ from repro.core.trace import Trace, prev_next_occurrence
 
 __all__ = [
     "RDResult",
+    "auto_sample_rate",
     "reuse_distances",
     "reuse_distances_vectorized",
     "sampled_reuse_distances",
+    "shards_keep_mask",
+    "shards_salt",
     "max_rd",
     "urd_cache_blocks",
 ]
@@ -52,10 +69,20 @@ class RDResult:
     distances: int64[n] — RD sample per access; -1 where the access produced
       no sample (cold access, or — for URD — a write access).
     kind: "trd" | "urd".
+    rate: spatial sampling rate the samples were measured at (1.0 = exact;
+      sampled distances are already scaled back by 1/rate).
+    expected_error: expected absolute hit-ratio-curve error of a curve built
+      from these samples — ~1/sqrt(kept distinct addresses) for
+      SHARDS-sampled results (FAST'15 sizes its reservoir in sampled
+      *locations*: curve noise is binomial over which addresses survive
+      the spatial filter, so the distinct count is the sample size that
+      matters), 0.0 for exact engines.
     """
 
     distances: np.ndarray
     kind: str
+    rate: float = 1.0
+    expected_error: float = 0.0
 
     @property
     def samples(self) -> np.ndarray:
@@ -156,29 +183,97 @@ def reuse_distances_vectorized(trace: Trace, kind: str = "urd",
     return RDResult(out, kind)
 
 
+_MASK64 = (1 << 64) - 1
+
+
+def shards_salt(seed: int, tenant: int = 0) -> int:
+    """Deterministic SHARDS hash salt in ``[1, 2**31 - 3]``.
+
+    A splitmix64-style mix of ``(seed, tenant)``: the same (tenant, window)
+    pair always tracks the same address subset — sampled curves stay
+    comparable across the Δt sequence — while distinct tenants and windows
+    decorrelate (important when tenants share an address space).
+    """
+    z = (int(seed) * 0x9E3779B97F4A7C15 + int(tenant) * 0xBF58476D1CE4E5B9
+         + 0x94D049BB133111EB) & _MASK64
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK64
+    z ^= z >> 31
+    return int(z % (2**31 - 3)) + 1
+
+
+def auto_sample_rate(n: int, target: int = 4096, floor: int = 256) -> float:
+    """SHARDS rate tuner: aim for ``target`` kept accesses per window.
+
+    ``floor`` is the minimum expected sample count a curve is allowed to be
+    built from — windows shorter than ``max(target, floor)`` are measured
+    exactly (rate 1.0), so tiny tenants never pay sampling noise.
+    """
+    n = int(n)
+    if n <= 0:
+        return 1.0
+    want = max(int(target), int(floor), 1)
+    return min(1.0, want / n)
+
+
+def shards_keep_mask(addrs: np.ndarray, rate: float, salt: int) -> np.ndarray:
+    """bool[n]: SHARDS spatial filter ``hash(addr) < rate`` (salted).
+
+    Cheap multiplicative hash -> [0, 1); evaluated in uint32 (the natural
+    wrap *is* the mod) against an integer threshold — exactly equivalent to
+    ``((addrs * 2654435761 + salt) % 2**32) / 2**32 < rate`` (division by
+    2**32 is exact in float64), at a quarter of the memory traffic.
+    """
+    thr = math.ceil(rate * float(2**32))
+    if thr >= 2**32:        # rate == 1 (or within 2**-32 of it): keep all
+        return np.ones(addrs.shape[0], dtype=bool)
+    h = (addrs.astype(np.uint32) * np.uint32(2654435761)
+         + np.uint32(salt))
+    return h < np.uint32(thr)
+
+
 def sampled_reuse_distances(trace: Trace, kind: str = "urd",
-                            rate: float = 0.1, seed: int = 0) -> RDResult:
+                            rate: float | str = 0.1, seed: int = 0,
+                            salt: int | None = None,
+                            target_samples: int = 4096,
+                            min_samples: int = 256,
+                            engine: str = "fast") -> RDResult:
     """SHARDS-style spatially-sampled reuse distances.
 
     Keeps addresses whose salted hash falls below ``rate``; distances measured
     on the filtered trace are scaled by ``1/rate`` (unbiased in expectation —
     Waldspurger et al., FAST'15).  Returned distances are the scaled values.
+
+    ``rate="auto"`` picks ``auto_sample_rate(len(trace), target_samples,
+    min_samples)``.  The filtered sub-trace goes through the vectorized
+    ``reuse_distances_fast`` engine by default (``engine="fenwick"`` keeps
+    the exact per-access loop as the equivalence oracle); both produce
+    identical distances, the fast path just restores the O(n·s) sampling
+    win the monitor relies on at scale.
     """
+    if rate == "auto":
+        rate = auto_sample_rate(len(trace), target_samples, min_samples)
+    rate = float(rate)
     if not (0 < rate <= 1):
         raise ValueError("rate must be in (0, 1]")
-    rng = np.random.default_rng(seed)
-    salt = rng.integers(1, 2**31 - 1)
-    # Cheap multiplicative hash -> [0, 1)
-    h = ((trace.addrs * 2654435761 + salt) % (2**32)) / float(2**32)
-    keep = h < rate
+    if salt is None:
+        salt = shards_salt(seed)
+    keep = shards_keep_mask(trace.addrs, rate, salt)
     sub = Trace(trace.addrs[keep], trace.is_read[keep], trace.name)
-    res = reuse_distances(sub, kind)
+    if engine == "fast":
+        from repro.core.batch_sim import reuse_distances_fast
+        res = reuse_distances_fast(sub, kind)
+    else:
+        res = reuse_distances(sub, kind)
     scaled = np.full(len(trace), -1, dtype=np.int64)
     vals = res.distances.copy()
     pos = vals >= 0
     vals[pos] = np.round(vals[pos] / rate).astype(np.int64)
     scaled[np.flatnonzero(keep)] = vals
-    return RDResult(scaled, kind)
+    distinct = int(np.unique(sub.addrs).size)
+    err = (0.0 if rate >= 1.0
+           else min(1.0, 1.0 / math.sqrt(max(distinct, 1))))
+    return RDResult(scaled, kind, rate=rate, expected_error=err)
 
 
 def max_rd(result: RDResult, percentile: float = 100.0) -> int:

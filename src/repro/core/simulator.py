@@ -88,6 +88,11 @@ class SimResult:
     cache_writes_l2: int = 0       # demotions into L2 (+ direct L2 installs)
     capacity2: int = 0
     policy2: str = "wb"
+    # 1 when the batch engine replayed this tenant-window through the
+    # per-access interpreter (two-level RO under eviction pressure — see
+    # batch_sim); 0 on every vectorized path.  Telemetry only: gives the
+    # ROADMAP's "two-level RO vectorized" item a measured denominator.
+    fallback: int = 0
 
     @property
     def n(self) -> int:

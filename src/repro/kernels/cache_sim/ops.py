@@ -18,7 +18,7 @@ from repro.kernels.cache_sim.kernel import (cache_sim_levels_scan,
 from repro.kernels.cache_sim.ref import cache_sim_levels_ref, cache_sim_ref
 
 __all__ = ["cache_sim_op", "cache_sim_levels_op", "stack_distances_accel",
-           "residency_levels_accel"]
+           "residency_levels_accel", "stack_distances_segments_accel"]
 
 
 def _on_tpu() -> bool:
@@ -60,6 +60,21 @@ def stack_distances_accel(prev: np.ndarray, nxt: np.ndarray,
     hot = prev >= 0
     out[hot] = counts[hot].astype(np.int64)
     return out
+
+
+def stack_distances_segments_accel(prev: np.ndarray, nxt: np.ndarray,
+                                   use_kernel: bool | None = None
+                                   ) -> np.ndarray:
+    """SD counting for a multi-tenant *tape* (segment-severed links).
+
+    The accelerator path of the fused monitor (``repro.core.monitor``):
+    links are severed at tenant block boundaries and ``nxt`` is clamped to
+    the owning block's end, so a hot access's counting window
+    ``(prev[i], i)`` never crosses a segment and the cross-segment
+    dominance contributions cancel — one kernel launch covers every
+    tenant's window at once, exactly like the batch replay engine's tape.
+    """
+    return stack_distances_accel(prev, nxt, use_kernel=use_kernel)
 
 
 def residency_levels_accel(prev: np.ndarray, nxt: np.ndarray,

@@ -1,0 +1,325 @@
+"""Fused monitor + vectorized partitioner: exactness, SHARDS accuracy,
+telemetry.
+
+The thousand-tenant control plane must be a pure optimization: on the
+exact path every curve / URD size / write ratio / allocation is
+bit-identical to the per-tenant seed code (still in-tree as the oracles:
+``reuse_distances_fast`` + ``build_hit_ratio_function`` + ``write_ratio``
+per tenant, and ``greedy_allocate(method="heap")``).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ECICacheManager, HitRatioFunction, Trace, WritePolicy,
+                        aggregate_latency, analyze_windows,
+                        build_hit_ratio_function, greedy_allocate,
+                        reuse_distances, reuse_distances_fast,
+                        sampled_reuse_distances, shards_salt, simulate_many,
+                        two_level_solve, urd_cache_blocks)
+from repro.core.mrc import BatchedHitRatioFunctions
+from repro.core.reuse_distance import auto_sample_rate, shards_keep_mask
+from repro.core.simulator import LRUCache
+from repro.core.write_policy import write_ratio
+
+
+def _rand_traces(seed, n_tenants=6, max_n=300, max_addr=40):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_tenants):
+        n = int(rng.integers(0, max_n))
+        a = rng.integers(0, max_addr, n).astype(np.int64)
+        r = rng.random(n) < rng.uniform(0.1, 0.9)
+        out.append(Trace(a, r, f"t{i}"))
+    # degenerate shapes the fused reductions must survive
+    out.append(Trace(np.zeros(0, np.int64), np.zeros(0, bool), "empty"))
+    out.append(Trace(np.arange(40, dtype=np.int64) % 4,
+                     np.zeros(40, bool), "all-writes"))
+    out.append(Trace(np.arange(30, dtype=np.int64), np.ones(30, bool),
+                     "streaming"))
+    return out
+
+
+# ---------------------------------------------------------- fused == seed
+@pytest.mark.parametrize("kind", ["urd", "trd"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fused_monitor_matches_per_tenant(kind, seed):
+    traces = _rand_traces(seed)
+    mon = analyze_windows(traces, kind)
+    for k, tr in enumerate(traces):
+        rd = reuse_distances_fast(tr, kind)
+        h = build_hit_ratio_function(rd)
+        assert np.array_equal(h.edges, mon.curves[k].edges)
+        assert np.array_equal(h.heights, mon.curves[k].heights)
+        assert h.n_accesses == mon.curves[k].n_accesses
+        assert urd_cache_blocks(rd) == mon.urd_sizes[k]
+        assert write_ratio(tr) == mon.write_ratios[k]
+        assert mon.sample_rates[k] == 1.0
+        assert mon.expected_errors[k] == 0.0
+
+
+def test_fused_monitor_precomputed_raw_path():
+    """Raw TRD arrays from the batch engine short-circuit the counting
+    pass without changing any output (mixed present/missing entries)."""
+    traces = _rand_traces(5)
+    pre = [reuse_distances(t, "trd").distances if (i % 2 == 0 and len(t))
+           else None for i, t in enumerate(traces)]
+    a = analyze_windows(traces, "urd")
+    b = analyze_windows(traces, "urd", precomputed_trd=pre)
+    for k in range(len(traces)):
+        assert np.array_equal(a.curves[k].edges, b.curves[k].edges)
+        assert np.array_equal(a.curves[k].heights, b.curves[k].heights)
+    assert np.array_equal(a.urd_sizes, b.urd_sizes)
+    assert np.array_equal(a.write_ratios, b.write_ratios)
+
+
+def test_fused_monitor_short_precomputed_list():
+    """A precomputed_trd list shorter than traces must not silently zero
+    out the uncovered tenants — missing entries are counted."""
+    traces = _rand_traces(13)
+    pre = [reuse_distances(traces[0], "trd").distances
+           if len(traces[0]) else None]
+    a = analyze_windows(traces, "urd")
+    b = analyze_windows(traces, "urd", precomputed_trd=pre)
+    assert np.array_equal(a.urd_sizes, b.urd_sizes)
+    for k in range(len(traces)):
+        assert np.array_equal(a.curves[k].heights, b.curves[k].heights)
+
+
+def test_shards_keep_mask_rate_near_one():
+    """rate within 2**-32 of 1.0 must keep everything, not overflow."""
+    a = np.arange(500, dtype=np.int64)
+    assert shards_keep_mask(a, 1.0 - 1e-13, 7).all()
+    s = sampled_reuse_distances(Trace(a % 9, np.ones(500, bool)),
+                                "trd", rate=1.0 - 1e-13)
+    e = reuse_distances_fast(Trace(a % 9, np.ones(500, bool)), "trd")
+    assert np.array_equal(s.distances, e.distances)
+
+
+def test_fused_monitor_percentile():
+    traces = _rand_traces(9)
+    mon = analyze_windows(traces, "urd", percentile=90.0)
+    for k, tr in enumerate(traces):
+        rd = reuse_distances_fast(tr, "urd")
+        assert urd_cache_blocks(rd, 90.0) == mon.urd_sizes[k]
+
+
+# ------------------------------------------------------- batched curves
+def test_batched_curves_evaluate_and_shift():
+    rng = np.random.default_rng(3)
+    hs = []
+    for _ in range(8):
+        k = int(rng.integers(1, 7))
+        sizes = np.cumsum(rng.integers(1, 30, k))
+        heights = np.minimum(np.cumsum(rng.random(k) * 0.3), 1.0)
+        hs.append(HitRatioFunction(
+            np.concatenate([[0], sizes]).astype(np.int64),
+            np.concatenate([[0.0], heights]), 500))
+    b = BatchedHitRatioFunctions.from_curves(hs)
+    queries = rng.integers(-2, 80, len(hs))
+    ev = b.evaluate(queries)
+    for i, h in enumerate(hs):
+        assert ev[i] == h(int(queries[i]))
+    bases = rng.integers(0, 60, len(hs))
+    sh = b.shifted(bases)
+    for i, h in enumerate(hs):
+        ref = h.shifted(int(bases[i]))
+        assert np.array_equal(ref.edges, sh[i].edges)
+        assert np.array_equal(ref.heights, sh[i].heights)
+    # sequence protocol keeps legacy partition_fns working
+    assert len(list(b)) == len(hs)
+    assert aggregate_latency(b, queries, 1.0, 20.0) == pytest.approx(
+        aggregate_latency(hs, queries, 1.0, 20.0))
+
+
+# ------------------------------------------- vectorized greedy == heap
+def _curve_strategy():
+    return st.lists(
+        st.lists(st.tuples(st.integers(1, 20), st.floats(0.01, 0.3)),
+                 min_size=1, max_size=5),
+        min_size=1, max_size=6)
+
+
+@settings(max_examples=150, deadline=None)
+@given(_curve_strategy(), st.integers(0, 120), st.integers(0, 12),
+       st.booleans())
+def test_greedy_fast_bit_identical_to_heap(steps_per_tenant, capacity,
+                                           c_min, weighted):
+    hs = []
+    for steps in steps_per_tenant:
+        sizes = np.cumsum([s for s, _ in steps])
+        heights = np.minimum(np.cumsum([h for _, h in steps]), 1.0)
+        hs.append(HitRatioFunction(
+            np.concatenate([[0], sizes]).astype(np.int64),
+            np.concatenate([[0.0], heights]), 1000))
+    w = (np.linspace(0.5, 2.0, len(hs)) if weighted else None)
+    heap = greedy_allocate(hs, capacity, 1.0, 20.0, c_min=c_min,
+                           weights=w, method="heap")
+    fast = greedy_allocate(hs, capacity, 1.0, 20.0, c_min=c_min,
+                           weights=w, method="fast")
+    assert np.array_equal(heap.sizes, fast.sizes)
+    assert heap.feasible == fast.feasible
+    assert np.array_equal(heap.hit_ratios, fast.hit_ratios)
+
+
+def test_two_level_solve_batched_matches_list():
+    traces = _rand_traces(11)
+    mon = analyze_windows(traces, "urd")
+    hs_list = list(mon.curves)
+    cap = max(1, int(mon.curves.max_useful_sizes.sum()) // 3)
+    for fn_kw in ({"partition_fn": greedy_allocate},):
+        p1a, p2a = two_level_solve(mon.curves, cap, cap // 2, 1.0, 3.0,
+                                   20.0, c_min=2, **fn_kw)
+        p1b, p2b = two_level_solve(hs_list, cap, cap // 2, 1.0, 3.0,
+                                   20.0, c_min=2, **fn_kw)
+        assert np.array_equal(p1a.sizes, p1b.sizes)
+        assert np.array_equal(p2a.sizes, p2b.sizes)
+
+
+# ------------------------------------------------------- SHARDS sampling
+def test_sampled_reuse_distances_fast_equals_fenwick():
+    """Satellite fix: the sampled monitor must route the filtered
+    sub-trace through the vectorized engine with unchanged output."""
+    rng = np.random.default_rng(0)
+    a = rng.integers(0, 200, 3000).astype(np.int64)
+    r = rng.random(3000) < 0.6
+    t = Trace(a, r)
+    for kind in ("trd", "urd"):
+        fast = sampled_reuse_distances(t, kind, rate=0.4, seed=9)
+        slow = sampled_reuse_distances(t, kind, rate=0.4, seed=9,
+                                       engine="fenwick")
+        assert np.array_equal(fast.distances, slow.distances)
+        assert fast.rate == 0.4 and fast.expected_error > 0.0
+
+
+def test_sampled_rate_one_is_exact():
+    t = Trace(np.arange(100, dtype=np.int64) % 9, np.ones(100, bool))
+    s = sampled_reuse_distances(t, "trd", rate=1.0)
+    e = reuse_distances_fast(t, "trd")
+    assert np.array_equal(s.distances, e.distances)
+    assert s.rate == 1.0 and s.expected_error == 0.0
+
+
+def test_salt_stable_per_tenant_window():
+    assert shards_salt(3, 7) == shards_salt(3, 7)
+    assert shards_salt(3, 7) != shards_salt(3, 8)
+    assert shards_salt(3, 7) != shards_salt(4, 7)
+    # fused monitor uses the same (window_seed, tenant) salts as the
+    # standalone function, so per-tenant results line up exactly
+    rng = np.random.default_rng(1)
+    traces = [Trace(rng.integers(0, 150, 1500).astype(np.int64),
+                    rng.random(1500) < 0.7, f"t{i}") for i in range(3)]
+    mon = analyze_windows(traces, "urd", sample_rate=0.5, window_seed=42)
+    for i, tr in enumerate(traces):
+        rd = sampled_reuse_distances(tr, "urd", rate=0.5,
+                                     salt=shards_salt(42, i))
+        h = build_hit_ratio_function(rd)
+        assert np.array_equal(h.edges, mon.curves[i].edges)
+        assert np.array_equal(h.heights, mon.curves[i].heights)
+        assert mon.urd_sizes[i] == urd_cache_blocks(rd)
+
+
+def test_auto_sample_rate_tuner():
+    assert auto_sample_rate(0) == 1.0
+    assert auto_sample_rate(100, target=4096) == 1.0      # tiny: exact
+    assert auto_sample_rate(8192, target=4096) == 0.5
+    assert auto_sample_rate(10**6, target=4096) == pytest.approx(4096 / 10**6)
+    # floor guards curves built from too few samples
+    assert auto_sample_rate(1000, target=100, floor=500) == 0.5
+    mask = shards_keep_mask(np.arange(1000, dtype=np.int64), 1.0, 123)
+    assert mask.all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 63), st.sampled_from([0.3, 0.5]))
+def test_sampled_curve_error_bound(seed, rate):
+    """SHARDS accuracy: on randomized zipf-ish traces the sampled curve
+    tracks the exact one within a few expected-error bars."""
+    rng = np.random.default_rng(seed)
+    ws = int(rng.integers(50, 400))
+    u = rng.random(4000)
+    a = np.minimum((u ** 2.0) * ws, ws - 1).astype(np.int64)
+    t = Trace(a, np.ones(4000, bool))
+    exact = build_hit_ratio_function(reuse_distances_fast(t, "trd"))
+    rd = sampled_reuse_distances(t, "trd", rate=rate, seed=seed)
+    samp = build_hit_ratio_function(rd)
+    grid = np.arange(0, max(exact.max_useful_size, 2), 2)
+    err = np.abs(samp(grid) - exact(grid))
+    # generous statistical bound: 4 expected-error bars, floor 0.1
+    assert float(err.max()) <= max(4.0 * rd.expected_error, 0.1), \
+        (seed, rate, float(err.max()), rd.expected_error)
+
+
+def test_monitor_sampled_write_ratio_unbiased_direction():
+    rng = np.random.default_rng(4)
+    a = rng.integers(0, 100, 4000).astype(np.int64)
+    r = rng.random(4000) < 0.5
+    t = Trace(a, r)
+    mon = analyze_windows([t], "urd", sample_rate=0.5, window_seed=0)
+    assert abs(float(mon.write_ratios[0]) - write_ratio(t)) < 0.1
+    assert 0.0 < mon.sample_rates[0] < 1.0
+    assert mon.expected_errors[0] > 0.0
+
+
+# ------------------------------------------------------ manager wiring
+def test_manager_auto_sampling_threshold():
+    names = [f"t{i}" for i in range(8)]
+    exact = ECICacheManager(5000, names, c_min=5, auto_sample_tenants=256)
+    assert exact.effective_sample_rate() is None
+    auto = ECICacheManager(5000, names, c_min=5, auto_sample_tenants=8)
+    assert auto.effective_sample_rate() == "auto"
+    rng = np.random.default_rng(0)
+    traces = [Trace(rng.integers(0, 60, 400).astype(np.int64),
+                    rng.random(400) < 0.6, nm) for nm in names]
+    auto.run_window(traces)
+    assert auto.history[-1].sizes.sum() > 0
+    assert auto.windows_analyzed == 1
+
+
+def test_manager_sampled_windows_progress_salts():
+    """Each Δt window gets fresh per-tenant salts (windows_analyzed)."""
+    names = ["a", "b"]
+    mgr = ECICacheManager(10**5, names, c_min=5, sample_rate=0.5)
+    rng = np.random.default_rng(0)
+    for w in range(3):
+        traces = [Trace(rng.integers(0, 900, 1200).astype(np.int64),
+                        rng.random(1200) < 0.7, nm) for nm in names]
+        mgr.run_window(traces)
+    assert mgr.windows_analyzed == 3
+    assert len(mgr.history) == 3
+
+
+# --------------------------------------------------- fallback telemetry
+def _pressure_trace():
+    # 3 live read addresses cycle twice: live count 3 > C1=1 forces the
+    # two-level RO guard to fail
+    a = np.array([0, 1, 2, 0, 1, 2], dtype=np.int64)
+    return Trace(a, np.ones(6, bool), "pressure")
+
+
+def test_simulate_many_flags_two_level_ro_fallback():
+    res = simulate_many([_pressure_trace()], capacities=[1],
+                        policies=[WritePolicy.RO], capacities2=[1],
+                        policies2=[WritePolicy.RO])
+    assert res[0].fallback == 1
+    # single-level RO pressure stays on the vectorized token path
+    res1 = simulate_many([_pressure_trace()], capacities=[1],
+                         policies=[WritePolicy.RO])
+    assert res1[0].fallback == 0
+    # WB never falls back
+    res2 = simulate_many([_pressure_trace()], capacities=[1],
+                         policies=[WritePolicy.WB], capacities2=[1])
+    assert res2[0].fallback == 0
+
+
+def test_manager_counts_ro_fallback_windows():
+    mgr = ECICacheManager(100, ["p"], c_min=1, initial_blocks=1,
+                          capacity2=4, adaptive_policy=False)
+    t = mgr.tenants[0]
+    t.policy = WritePolicy.RO
+    t.cache2 = LRUCache(1)
+    mgr.run_window([_pressure_trace()])
+    assert mgr.ro_fallback_windows == 1
+    assert mgr.tenant_windows == 1
+    assert mgr.summary()["ro_fallback_windows"] == 1
+    assert t.result.fallback == 1
