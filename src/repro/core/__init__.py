@@ -4,8 +4,10 @@ Public API re-exports for the paper's primary contribution.
 """
 from repro.core.baselines import GlobalLRUManager, make_manager
 from repro.core.batch_sim import (reuse_distances_fast,
-                                  ro_token_replay_device, simulate_batch,
-                                  simulate_many, stack_distances)
+                                  ro_token_replay_device,
+                                  ro_token_replay_levels_device,
+                                  simulate_batch, simulate_many,
+                                  stack_distances)
 from repro.core.manager import AnalyzerDecision, ECICacheManager, TenantState
 from repro.core.monitor import MonitorResult, analyze_windows
 from repro.core.mrc import (BatchedHitRatioFunctions, HitRatioFunction,
@@ -38,7 +40,8 @@ __all__ = [
     "greedy_allocate", "make_manager", "max_rd", "pgd_solve",
     "rebalance_levels", "request_type_mix", "reuse_distances",
     "reuse_distances_fast", "reuse_distances_vectorized",
-    "ro_token_replay_device", "sampled_reuse_distances", "shards_salt",
+    "ro_token_replay_device", "ro_token_replay_levels_device",
+    "sampled_reuse_distances", "shards_salt",
     "simulate", "simulate_batch", "simulate_many", "stack_distances",
     "total_cache_writes_wb", "two_level_solve", "urd_cache_blocks",
     "write_ratio",

@@ -31,9 +31,13 @@ __all__ = ["make_manager", "GlobalLRUManager", "SCHEMES"]
 def _static_partition(hs: list[HitRatioFunction], capacity: int,
                       t_fast: float, t_slow: float,
                       c_min: int = 0, weights=None) -> PartitionResult:
+    """Equal static split; the ``capacity % n`` remainder blocks are
+    granted deterministically to the first tenants (one each) instead of
+    being silently dropped, so the full budget is always allocated."""
     n = max(len(hs), 1)
-    share = capacity // n
+    share, rem = divmod(capacity, n)
     sizes = np.full(len(hs), share, dtype=np.int64)
+    sizes[:rem] += 1
     from repro.core.partitioner import aggregate_latency
     return PartitionResult(
         sizes, False, aggregate_latency(hs, sizes, t_fast, t_slow, weights),
@@ -43,13 +47,30 @@ def _static_partition(hs: list[HitRatioFunction], capacity: int,
 def _reuse_intensity_partition(hs: list[HitRatioFunction], capacity: int,
                                t_fast: float, t_slow: float,
                                c_min: int = 0, weights=None) -> PartitionResult:
-    """Proportional to max achievable hit mass (reuse intensity proxy)."""
+    """Proportional to max achievable hit mass (reuse intensity proxy).
+
+    Every tenant is floored at ``min(c_min, capacity // n)`` *before* the
+    proportional split, and only the residual budget is divided by
+    intensity (largest-remainder rounding, ties broken by tenant index) —
+    so ``sum(sizes) == capacity`` exactly.  Clamping after the
+    proportional floor used to let intensity-skewed mixes overshoot the
+    budget (e.g. two tenants, capacity 10, c_min 5, intensities 99:1 →
+    floors [9, 0] → clamped [9, 5] = 14 blocks).
+    """
+    n = len(hs)
     intensity = np.array([h.max_hit_ratio * h.n_accesses for h in hs], float)
     total = intensity.sum()
-    if total <= 0:
+    if total <= 0 or n == 0:
         return _static_partition(hs, capacity, t_fast, t_slow, c_min, weights)
-    sizes = np.floor(intensity / total * capacity).astype(np.int64)
-    sizes = np.maximum(sizes, min(c_min, capacity // max(len(hs), 1)))
+    cm = min(c_min, capacity // n)
+    residual = capacity - cm * n
+    raw = intensity / total * residual
+    sizes = cm + np.floor(raw).astype(np.int64)
+    residue = capacity - int(sizes.sum())         # < n floor leftovers
+    if residue > 0:
+        frac = raw - np.floor(raw)
+        order = np.lexsort((np.arange(n), -frac))
+        sizes[order[:residue]] += 1
     from repro.core.partitioner import aggregate_latency
     return PartitionResult(
         sizes, False, aggregate_latency(hs, sizes, t_fast, t_slow, weights),

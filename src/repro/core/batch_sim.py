@@ -52,10 +52,12 @@ capacity eviction has occurred.  Counterexample at C=2 for trace
 ``r(c)``, so the final read misses, but after the two invalidations only
 zero live blocks separate ``r(a)`` from its reuse, so any distance oracle
 says hit.  The engine therefore computes the *live count*
-``L(t) = #{ j <= t : is_read[j], nxt[j] > t }`` (O(n) cumsum); when
+``L(t) = #{ j <= t : is_read[j], nxt[j] > t }`` (an O(n) cumsum — numpy on
+host, the ``cache_sim`` live-count op on-device on TPU); when
 ``max L <= C`` the cache never fills, no eviction can occur, and
-``resident ⟺ live`` is exact — otherwise that tenant's window falls back
-to the interpreter.  WB/WT never need the guard (no deletions).
+``resident ⟺ live`` is exact — otherwise that tenant's window is replayed
+by the O(n) *eviction-token* loop (below).  WB/WT never need the guard
+(no deletions).
 
 Endurance / latency / flush accounting are pure array reductions:
 per-address *dirty chains* (segmented cumulative OR over residency
@@ -86,16 +88,52 @@ segment at L1 exits (``SD >= C1``) instead of union exits, and the flush
 eviction test uses the ``C1`` threshold.  Final per-level LRU state is the
 union survivor stack split at depth ``C1``.  RO (write-around) keeps the
 live-count guard, compared per level (``L1-live = live − untouched warm-L2
-blocks``); two-level RO windows under eviction pressure fall back to the
-interpreter (invalidation breaks the stack property — see above), while
-single-level RO pressure keeps the O(n) token loop, which also has a
-``lax.fori_loop`` on-device port (``ro_token_replay_device``).
+blocks``).
+
+Two-level RO under eviction pressure (the token formulation, per level)
+=======================================================================
+
+When a two-level RO window fails the guard the stack property is gone
+(invalidation leaves a *hole* in L1 that the next install fills without
+demoting), but the eviction-token formulation generalizes: every read
+position is a token, and each token additionally carries a **level**.
+Three facts make the replay O(n) with two forward pointers:
+
+  * *Recency is birth order, per level.*  A touch always creates a new
+    token (hit = renewal, promotion = rebirth in L1), so within each
+    level the LRU order is token-position order.
+  * *Demotion order is position order.*  The demoted victim is always
+    L1's minimum live position, which is non-decreasing over time, so L2's
+    arrival order (warm L2 first, then demotions) is ascending position.
+  * *Every live L1 position exceeds every live L2 position.*  After a
+    demotion of position ``q`` all remaining L1 tokens sit above ``q``,
+    and later births sit higher still — so the L2 victim scan never has
+    to check levels (the lowest live token *is* the L2 victim), and the
+    L1 victim scan (``_ro_token_replay_levels``'s ``b1``) just skips
+    demoted tokens.
+
+Invalidation frees a slot in whichever level holds the token (a hole:
+the next install does *not* demote), an L2 read hit retires its token and
+rebirths it in L1 (demoting L1's victim only when L1 is actually full),
+and a demotion *transfers* the token to L2 — shortening its death time
+only if L2 then overflows (the final eviction, flushed when dirty; with a
+clean ``policy2`` the flush happens at the demotion boundary instead and
+the token's dirty flag clears).  Afterwards every residency question is
+vectorized exactly as in the single-level case, plus ``lvl[prev]`` splits
+hits by level.  Both the single-level loop and this two-level
+generalization have ``lax.fori_loop`` on-device ports
+(``ro_token_replay_device`` / ``ro_token_replay_levels_device``), used
+automatically on TPU hosts; the interpreter remains only for genuinely
+degenerate windows (empty two-level windows, or warm L2 behind a dead
+``C2 <= 0`` level), counted by ``SimResult.fallback``.
 
 On TPU the ``SD`` counting runs on-accelerator via the
 ``repro.kernels.cache_sim`` Pallas kernel (the occupancy-masked
 generalization of ``urd_scan``); on CPU the merge-tree host path is used.
 """
 from __future__ import annotations
+
+import itertools
 
 import numpy as np
 
@@ -110,6 +148,7 @@ __all__ = [
     "stack_distances",
     "reuse_distances_fast",
     "ro_token_replay_device",
+    "ro_token_replay_levels_device",
     "simulate_batch",
     "simulate_many",
 ]
@@ -312,7 +351,88 @@ def _ro_token_replay(is_read_blk: np.ndarray, prev_blk: np.ndarray,
             np.asarray(dirty, dtype=bool), flushes)
 
 
+def _ro_token_replay_levels(is_read_blk: np.ndarray, prev_blk: np.ndarray,
+                            nxt_blk: np.ndarray, force_blk: np.ndarray,
+                            cap1: int, cap2: int, l2_end: int,
+                            clean2: bool
+                            ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                                       int, int]:
+    """Exact two-level RO replay under eviction pressure, O(n).
+
+    The eviction-token loop generalized to the exclusive demote/promote
+    hierarchy (see the module docstring): each token carries a *level*,
+    recency within each level is token-position order, demotions transfer
+    the L1 victim (minimum live L1 position — non-decreasing, so a forward
+    pointer ``b1`` that skips demoted tokens suffices) into L2, and an L2
+    overflow evicts the globally-lowest live token (``b2``; always L2,
+    because live L1 positions provably sit above all live L2 positions).
+    Invalidation frees a slot in whichever level holds the token; the next
+    install fills the hole without demoting.  ``clean2`` flushes dirty
+    victims at the demotion boundary (entering L2 clean) instead of at the
+    final L2 eviction.
+
+    Positions below ``l2_end`` are the warm-L2 pseudo-reads: their tokens
+    are born directly in L2.  Warm-L1 pseudo-reads need no special case —
+    they are read misses installing into a never-overflowing L1.
+
+    Returns ``(death, dirty, lvl, flushes, demotions)``: ``death[j]`` =
+    when token j left the hierarchy entirely (== ``nxt_blk[j]`` iff never
+    evicted from L2), ``dirty[j]`` = the flag the token carried, ``lvl[j]``
+    = the level it occupied when it died (splits hits per level),
+    ``flushes`` = dirty evictions/demotion-flushes, ``demotions`` = L2
+    cache writes.
+    """
+    n = int(is_read_blk.shape[0])
+    rd = is_read_blk.tolist()
+    pv = prev_blk.tolist()
+    death = nxt_blk.tolist()
+    dirty = force_blk.tolist()
+    lvl = [1] * n
+    flushes = demotions = 0
+    res1 = res2 = 0
+    b1 = b2 = 0                                  # per-level victim candidates
+    for t in range(n):
+        if t < l2_end:
+            lvl[t] = 2                           # warm-L2 token: born in L2
+            res2 += 1
+            continue
+        p = pv[t]
+        if rd[t]:
+            if p >= 0 and rd[p] and death[p] == t:
+                dirty[t] = dirty[p]              # hit: token renewal
+                if lvl[p] == 1:
+                    continue                     # L1 hit: occupancy unchanged
+                res2 -= 1                        # L2 hit: promote out of L2
+            res1 += 1                            # install / rebirth into L1
+            if res1 > cap1:
+                while not rd[b1] or death[b1] <= t or lvl[b1] == 2:
+                    b1 += 1                      # min live L1 token
+                lvl[b1] = 2                      # demote into L2's MRU
+                if clean2 and dirty[b1]:
+                    flushes += 1                 # flush at the demotion
+                    dirty[b1] = False
+                res1 -= 1
+                res2 += 1
+                demotions += 1
+                if res2 > cap2:
+                    while not rd[b2] or death[b2] <= t:
+                        b2 += 1                  # min live token == L2 victim
+                    death[b2] = t                # evicted for good
+                    if dirty[b2]:
+                        flushes += 1
+                    res2 -= 1
+        elif p >= 0 and rd[p] and death[p] == t:
+            if lvl[p] == 1:                      # write-hit: invalidate the
+                res1 -= 1                        # holding level (a hole)
+            else:
+                res2 -= 1
+    return (np.asarray(death, dtype=np.int64),
+            np.asarray(dirty, dtype=bool),
+            np.asarray(lvl, dtype=np.int8), flushes, demotions)
+
+
 _RO_DEVICE_JIT = None
+_RO_LEVELS_DEVICE_JIT = None
 
 
 def _ro_device_core():
@@ -402,6 +522,130 @@ def ro_token_replay_device(is_read_blk: np.ndarray, prev_blk: np.ndarray,
     return death, np.asarray(dirty)[:n].astype(bool), int(fl)
 
 
+def _ro_levels_device_core():
+    """Build (and cache) the jitted two-level token-replay loop."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def run(rd, pv, nxt, force, cap1, cap2, l2_end, clean2):
+        n = rd.shape[0]
+
+        def body(t, carry):
+            death, dirty, lvl, fl, res1, res2, b1, b2, dem = carry
+            p = pv[t]
+            ps = jnp.maximum(p, 0)
+            hit = (p >= 0) & rd[ps] & (death[ps] == t)
+            hit1 = hit & (lvl[ps] == 1)
+            hit2 = hit & (lvl[ps] == 2)
+
+            def warm_l2(c):
+                death, dirty, lvl, fl, res1, res2, b1, b2, dem = c
+                return (death, dirty, lvl.at[t].set(2), fl,
+                        res1, res2 + 1, b1, b2, dem)
+
+            def demote(c):
+                death, dirty, lvl, fl, res1, res2, b1, b2, dem = c
+                b1 = jax.lax.while_loop(
+                    lambda b: (~rd[b]) | (death[b] <= t) | (lvl[b] == 2),
+                    lambda b: b + 1, b1)
+                fl = fl + (clean2 & dirty[b1]).astype(jnp.int32)
+                dirty = dirty.at[b1].set(dirty[b1] & ~clean2)
+                lvl = lvl.at[b1].set(2)
+                c2s = (death, dirty, fl, res2 + 1, b2)
+
+                def evict2(c2):
+                    death, dirty, fl, res2, b2 = c2
+                    b2 = jax.lax.while_loop(
+                        lambda b: (~rd[b]) | (death[b] <= t),
+                        lambda b: b + 1, b2)
+                    fl = fl + dirty[b2].astype(jnp.int32)
+                    return (death.at[b2].set(t), dirty, fl, res2 - 1, b2)
+
+                death, dirty, fl, res2, b2 = jax.lax.cond(
+                    res2 + 1 > cap2, evict2, lambda c2: c2, c2s)
+                return (death, dirty, lvl, fl, res1 - 1, res2, b1, b2,
+                        dem + 1)
+
+            def read_case(c):
+                def on_hit1(c):
+                    death, dirty, lvl, fl, res1, res2, b1, b2, dem = c
+                    return (death, dirty.at[t].set(dirty[ps]), lvl, fl,
+                            res1, res2, b1, b2, dem)
+
+                def on_other(c):
+                    # promotion (hit2) or miss: a new token born in L1
+                    death, dirty, lvl, fl, res1, res2, b1, b2, dem = c
+                    dirty = dirty.at[t].set(
+                        jnp.where(hit2, dirty[ps], dirty[t]))
+                    res1 = res1 + 1
+                    res2 = res2 - hit2.astype(jnp.int32)
+                    c = (death, dirty, lvl, fl, res1, res2, b1, b2, dem)
+                    return jax.lax.cond(res1 > cap1, demote,
+                                        lambda c: c, c)
+
+                return jax.lax.cond(hit1, on_hit1, on_other, c)
+
+            def write_case(c):
+                death, dirty, lvl, fl, res1, res2, b1, b2, dem = c
+                return (death, dirty, lvl, fl,
+                        res1 - hit1.astype(jnp.int32),
+                        res2 - hit2.astype(jnp.int32), b1, b2, dem)
+
+            def window(c):
+                return jax.lax.cond(rd[t], read_case, write_case, c)
+
+            return jax.lax.cond(t < l2_end, warm_l2, window, carry)
+
+        carry = (nxt.astype(jnp.int32), force, jnp.ones(n, jnp.int32),
+                 jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                 jnp.int32(0), jnp.int32(0), jnp.int32(0))
+        death, dirty, lvl, fl, _, _, _, _, dem = jax.lax.fori_loop(
+            0, n, body, carry)
+        return death, dirty, lvl, fl, dem
+
+    return run
+
+
+def ro_token_replay_levels_device(is_read_blk: np.ndarray,
+                                  prev_blk: np.ndarray, nxt_blk: np.ndarray,
+                                  force_blk: np.ndarray, cap1: int,
+                                  cap2: int, l2_end: int, clean2: bool
+                                  ) -> tuple[np.ndarray, np.ndarray,
+                                             np.ndarray, int, int]:
+    """``_ro_token_replay_levels`` as a ``lax.fori_loop`` device pass.
+
+    Same token formulation, same outputs (the host loop stays the oracle —
+    equivalence-tested on randomized two-level RO-pressure traces), so
+    two-level RO tenants under eviction pressure stay on-device on TPU
+    hosts.  Inputs are padded to a multiple of 64 with no-op writes
+    (``prev = -1``) to bound jit retraces across window lengths.
+    """
+    import jax.numpy as jnp
+    global _RO_LEVELS_DEVICE_JIT
+    if _RO_LEVELS_DEVICE_JIT is None:
+        _RO_LEVELS_DEVICE_JIT = _ro_levels_device_core()
+    n = int(is_read_blk.shape[0])
+    if n == 0:
+        return (np.zeros(0, np.int64), np.zeros(0, bool),
+                np.zeros(0, np.int8), 0, 0)
+    pad = (-n) % 64
+    rd = np.pad(is_read_blk.astype(bool), (0, pad), constant_values=False)
+    pv = np.pad(prev_blk.astype(np.int32), (0, pad), constant_values=-1)
+    nx = np.pad(nxt_blk.astype(np.int32), (0, pad), constant_values=n + pad)
+    fc = np.pad(force_blk.astype(bool), (0, pad), constant_values=False)
+    death, dirty, lvl, fl, dem = _RO_LEVELS_DEVICE_JIT(
+        jnp.asarray(rd), jnp.asarray(pv), jnp.asarray(nx), jnp.asarray(fc),
+        jnp.int32(cap1), jnp.int32(cap2), jnp.int32(l2_end),
+        jnp.asarray(bool(clean2)))
+    death = np.asarray(death)[:n].astype(np.int64)
+    # padded positions never evict, so real token deaths are unaffected,
+    # but clamp natural deaths back to the unpadded horizon
+    death = np.minimum(death, nxt_blk.astype(np.int64))
+    return (death, np.asarray(dirty)[:n].astype(bool),
+            np.asarray(lvl)[:n].astype(np.int8), int(fl), int(dem))
+
+
 def _segment_heads(sorted_vals: np.ndarray) -> np.ndarray:
     head = np.ones(sorted_vals.shape[0], dtype=bool)
     head[1:] = sorted_vals[1:] != sorted_vals[:-1]
@@ -426,11 +670,13 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     second hierarchy level (see the module docstring — both levels are
     classified against the same stack-distance array).  RO tenants whose
     window fails the no-eviction guard (see module docstring) are replayed
-    with the token loop (single-level) or the interpreter (two-level)
-    instead — same results, just slower; the two-level interpreter
-    fallbacks are flagged with ``SimResult.fallback = 1`` so deployments
-    can measure how often the vectorized path is missed
-    (``ECICacheManager`` aggregates the counter).
+    with the O(n) eviction-token loop — single-level or the per-level
+    two-level generalization — so write-around windows under pressure
+    never leave the vectorized path.  The per-access interpreter remains
+    only for genuinely degenerate windows (an empty window with two
+    levels, or warm L2 content behind a dead ``C2 <= 0`` level); those are
+    flagged with ``SimResult.fallback = 1`` so deployments can measure how
+    often it happens (``ECICacheManager`` aggregates the counter).
 
     With ``return_window_rd=True`` also returns, per tenant, the TRD
     sample array of the *window* trace (``reuse_distances(trace, "trd")``,
@@ -475,6 +721,7 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
         if n == 0:
             if two:                  # rebalance/flush side effects still run
                 results[k] = run_interp(k)
+                results[k].fallback = 1          # degenerate: telemetry
             else:
                 results[k] = SimResult(capacity=cap, policy=pol.value)
             continue
@@ -487,6 +734,7 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
             continue
         if two and cap2 <= 0:        # degenerate warm L2 behind a dead level
             results[k] = run_interp(k)
+            results[k].fallback = 1              # degenerate: telemetry
             continue
         vec.append(k)
 
@@ -582,34 +830,58 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     nxt[ordi[:-1]] = np.where(same_prev[1:], ordi[1:], m)
     nxt_c = np.minimum(nxt, end_of)
 
+    # clean-L2 policies flush any warm dirty L2 content up-front (the
+    # interpreter does the same); the tape forgets those flags so the
+    # token replays, dirty chains and final state all see a clean L2
+    flush_pre = np.zeros(len(vec), np.int64)
+    if force_dirty.any():
+        for t in range(len(vec)):
+            if not clean2_arr[t]:
+                continue
+            sl = slice(starts[t], l2_ends[t])
+            nd = int(np.sum(force_dirty[sl]))
+            if nd:
+                flush_pre[t] = nd
+                force_dirty[sl] = False
+
     # --------------------------------------- RO residency: guard or tokens
     # L[t] = live blocks after access t assuming no eviction; for a real
     # L1 level subtract U2[t] = still-untouched warm-L2 blocks (they live
     # in L2, not L1).  While L1-live <= C1 the level can never have filled,
     # so no eviction/demotion has occurred and resident ⟺ live is exact.
-    # Single-level tenants (C2 == 0, or C1 == 0 where L2 *is* the level)
-    # exceeding the bound are replayed by the O(n) eviction-token loop
-    # (``_ro_token_replay`` / its fori_loop device port) — still exact,
-    # still loop-free afterwards: the loop only shortens token deaths, and
-    # hits are recovered as ``death[prev] == i``.  Two-level RO windows
-    # under pressure fall back to the interpreter (invalidation breaks the
-    # stack property, and the token formulation is single-level).
+    # Tenants exceeding the bound are replayed by the O(n) eviction-token
+    # loop — single-level (``_ro_token_replay``) when C2 == 0 or C1 == 0
+    # (where L2 *is* the level), the per-level two-level generalization
+    # (``_ro_token_replay_levels``) otherwise — still exact, still
+    # loop-free afterwards: the loops only shorten token deaths and
+    # transfer levels, and hits are recovered as ``death[prev] == i``
+    # (split per level by ``lvl[prev]``).  Both have fori_loop device
+    # ports used on TPU hosts, where the guard's live counts also stay
+    # on-device (cache_sim's O(n) delta-cumsum live-count op).
     tokens: dict[int, tuple[np.ndarray, np.ndarray, int]] = {}
-    fallback: set[int] = set()
+    tokens2: dict[int, tuple[np.ndarray, np.ndarray, np.ndarray,
+                             int, int]] = {}
     if np.any(pol_codes == 2):
-        occ_idx = np.flatnonzero(is_read)
-        d = (np.bincount(occ_idx, minlength=m + 1)
-             - np.bincount(nxt_c[occ_idx], minlength=m + 1))
-        L = np.cumsum(d[:m])
         w2 = np.flatnonzero(pos < l2end_of)      # warm-L2 pseudo positions
-        if w2.size:
-            du = (np.bincount(w2, minlength=m + 1)
-                  - np.bincount(nxt_c[w2], minlength=m + 1))
-            U2 = np.cumsum(du[:m])
+        if _accel_default():
+            from repro.kernels.cache_sim.ops import ro_live_counts_accel
+            L = ro_live_counts_accel(nxt_c, is_read)
+            U2 = (ro_live_counts_accel(nxt_c, pos < l2end_of)
+                  if w2.size else None)
         else:
-            U2 = None
+            d = (np.bincount(np.flatnonzero(is_read), minlength=m + 1)
+                 - np.bincount(nxt_c[is_read], minlength=m + 1))
+            L = np.cumsum(d[:m])
+            if w2.size:
+                du = (np.bincount(w2, minlength=m + 1)
+                      - np.bincount(nxt_c[w2], minlength=m + 1))
+                U2 = np.cumsum(du[:m])
+            else:
+                U2 = None
         token_replay = (ro_token_replay_device if _accel_default()
                         else _ro_token_replay)
+        token_replay2 = (ro_token_replay_levels_device if _accel_default()
+                         else _ro_token_replay_levels)
         for t, k in enumerate(vec):
             if pol_codes[t] != 2:
                 continue
@@ -621,9 +893,10 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
                 lt = lt - U2[s:e]
             if int(lt.max()) > ro_cap:
                 if cap1 > 0 and cap2 > 0:
-                    fallback.add(t)
-                    results[k] = run_interp(k)
-                    results[k].fallback = 1      # telemetry: counted upstream
+                    tokens2[t] = token_replay2(
+                        is_read[s:e], prev[s:e] - s, nxt_c[s:e] - s,
+                        force_dirty[s:e], cap1, cap2,
+                        int(l2_ends_a[t] - s), bool(clean2_arr[t]))
                 else:
                     tokens[t] = token_replay(
                         is_read[s:e], prev[s:e] - s, nxt_c[s:e] - s,
@@ -661,7 +934,8 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
         res_un_sd = hot & (sd < captot_of) & (sd >= 0)
     res_ro = hot & is_read[prev_safe]
     resident = np.where(pol_of == 2, res_ro, res_un_sd)
-    for t, (death, _, _) in tokens.items():
+    for t, rec in itertools.chain(tokens.items(), tokens2.items()):
+        death = rec[0]
         s, e = starts[t], ends[t]
         pl = prev[s:e] - s
         pls = np.maximum(pl, 0)
@@ -669,25 +943,16 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
         resident[s:e] = ((pl >= 0) & blk_read[pls]
                          & (death[pls] == np.arange(e - s)))
     # split hits by level: WB/WT against the two stack thresholds, RO by
-    # whether the previous occurrence is a still-untouched warm-L2 block
+    # whether the previous occurrence is a still-untouched warm-L2 block —
+    # or, under eviction pressure, by the level the token died in
     res_l2 = np.where(pol_of == 2,
                       resident & (prev_safe < l2b_of),
                       resident & ~res_l1_sd)
+    for t, (_, _, lv, _, _) in tokens2.items():
+        s, e = starts[t], ends[t]
+        pls = np.maximum(prev[s:e] - s, 0)
+        res_l2[s:e] = resident[s:e] & (lv[pls] == 2)
     res_l1 = resident & ~res_l2
-
-    # clean-L2 policies flush any warm dirty L2 content up-front (the
-    # interpreter does the same); the tape forgets those flags so dirty
-    # chains and final state see a clean L2
-    flush_pre = np.zeros(len(vec), np.int64)
-    if force_dirty.any():
-        for t, k in enumerate(vec):
-            if t in fallback or not clean2_arr[t]:
-                continue
-            sl = slice(starts[t], l2_ends[t])
-            nd = int(np.sum(force_dirty[sl]))
-            if nd:
-                flush_pre[t] = nd
-                force_dirty[sl] = False
 
     # ------------------------------------------------------- dirty chains
     # group by address, segment at installs (non-resident accesses — for a
@@ -744,6 +1009,8 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     flush_per += flush_pre
     for t, (_, _, fl) in tokens.items():         # RO evictions under pressure
         flush_per[t] += fl
+    for t, (_, _, _, fl, _) in tokens2.items():  # incl. demotion flushes
+        flush_per[t] += fl
 
     # ------------------------------------------------------- per-tenant stats
     # one fused bincount: code = 8*tenant + 4*is_read + level
@@ -762,8 +1029,6 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
     U_per = np.bincount(tid[last], minlength=len(vec))
 
     for t, k in enumerate(vec):
-        if t in fallback:
-            continue                             # interpreter already ran
         pol = policies[k]
         cap1, cap2 = int(cap1_arr[t]), int(cap2_arr[t])
         captot = cap1 + cap2
@@ -800,7 +1065,9 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
                                + fl * flush_cost)
         else:
             if cap1 > 0:
-                r.cache_writes = rmiss + l2h
+                r.cache_writes = rmiss + l2h     # installs + promotions
+                if t in tokens2:                 # demotions under pressure
+                    r.cache_writes_l2 = int(tokens2[t][4])
             elif captot > 0:
                 r.cache_writes_l2 = rmiss
             r.total_latency = (r.read_hits * t_fast + rmiss * t_slow
@@ -820,10 +1087,16 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
         c2v = caches2[k]
         if c is not None or c2v is not None:
             sl = slice(starts[t], ends[t])
+            surv_lvl = None
             if t in tokens:
                 death, tdirty, _ = tokens[t]
                 keep = is_read[sl] & (death == ends[t] - starts[t])
                 dirty_keep = tdirty[keep]
+            elif t in tokens2:
+                death, tdirty, tlvl, _, _ = tokens2[t]
+                keep = is_read[sl] & (death == ends[t] - starts[t])
+                dirty_keep = tdirty[keep]
+                surv_lvl = tlvl[keep]
             else:
                 blk_last = last[sl]
                 if pol is WritePolicy.RO:
@@ -836,9 +1109,12 @@ def simulate_many(traces: list[Trace], capacities=None, policies=None, *,
                 if c is not None:
                     c.set_state_arrays(orig_addr[js], dirty_keep)
             else:
-                # split the union survivor stack at depth C1 (WB/WT), or by
-                # warm-L2 pseudo position (RO: untouched blocks stay in L2)
-                if pol is WritePolicy.RO:
+                # split the union survivor stack at depth C1 (WB/WT), by
+                # warm-L2 pseudo position (RO: untouched blocks stay in
+                # L2), or by the surviving token's level (RO pressure)
+                if surv_lvl is not None:
+                    in_l2 = surv_lvl == 2
+                elif pol is WritePolicy.RO:
                     in_l2 = js < int(l2b_arr[t])
                 else:
                     n1 = min(cap1, js.size)

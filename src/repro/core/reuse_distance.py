@@ -259,6 +259,15 @@ def sampled_reuse_distances(trace: Trace, kind: str = "urd",
     if salt is None:
         salt = shards_salt(seed)
     keep = shards_keep_mask(trace.addrs, rate, salt)
+    if not keep.any():
+        # A fixed low rate on a tiny window can keep zero accesses: return
+        # a well-formed empty result (no samples -> ``urd_cache_blocks``
+        # is 0 and curves built from it are flat at 0) with the error bar
+        # saturated at 1, instead of running the engines on an empty
+        # sub-trace.  An empty *input* trace is exact by definition.
+        return RDResult(np.full(len(trace), -1, dtype=np.int64), kind,
+                        rate=rate,
+                        expected_error=0.0 if len(trace) == 0 else 1.0)
     sub = Trace(trace.addrs[keep], trace.is_read[keep], trace.name)
     if engine == "fast":
         from repro.core.batch_sim import reuse_distances_fast

@@ -25,7 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import tpu_compiler_params
 
-__all__ = ["cache_sim_scan", "cache_sim_levels_scan"]
+__all__ = ["cache_sim_scan", "cache_sim_levels_scan", "live_count_scan"]
 
 
 def _kernel(prev_ref, nxt_ref, occ_ref, out_ref, acc_scr, *, tile: int):
@@ -95,6 +95,74 @@ def cache_sim_scan(prev: jax.Array, nxt: jax.Array, occ: jax.Array, *,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(prev2, nxt2, occ2)
+    return out.reshape(nt * tile)[:n]
+
+
+def _live_kernel(nxt_ref, occ_ref, out_ref, acc_scr, *, tile: int):
+    ii = pl.program_id(0)
+    jj = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(jj == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    i_idx = ii * tile + jax.lax.broadcasted_iota(
+        jnp.int32, (tile, tile), 0)                      # rows: i
+    j_idx = jj * tile + jax.lax.broadcasted_iota(
+        jnp.int32, (tile, tile), 1)                      # cols: j
+    nxt_j = nxt_ref[0]                                   # [1, tile] int32
+    occ_j = occ_ref[0]                                   # [1, tile] int32
+
+    contrib = (
+        (j_idx <= i_idx)
+        & (nxt_j.reshape(1, tile) > i_idx)
+        & (occ_j.reshape(1, tile) > 0)
+    )
+    acc_scr[...] += jnp.sum(contrib.astype(jnp.float32), axis=1,
+                            keepdims=True)
+
+    @pl.when(jj == nj - 1)
+    def _finalize():
+        out_ref[0] = acc_scr[...].reshape(tile).astype(jnp.int32)
+
+
+def live_count_scan(nxt: jax.Array, occ: jax.Array, *, tile: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    """nxt int32[n] occurrence links, occ int32[n] -> live counts int32[n].
+
+    counts[i] = #{ j <= i : occ[j], nxt[j] > i } — the RO write-around
+    live count (occupying tokens resident after access i assuming no
+    eviction).  Same (i, j)-plane layout as ``cache_sim_scan`` with the
+    interval test flipped to "covers i from the left"; this is the
+    accelerator path of the batch engine's RO no-eviction guard, feeding
+    the eviction-token replay dispatch (see ``batch_sim``).
+    """
+    n = nxt.shape[0]
+    nt = -(-n // tile)
+    pad = nt * tile - n
+    if pad:
+        # padded j cols: never occupy, and nxt = -1 never covers a row
+        nxt = jnp.pad(nxt, (0, pad), constant_values=-1)
+        occ = jnp.pad(occ, (0, pad), constant_values=0)
+    nxt2 = nxt.reshape(nt, tile).astype(jnp.int32)
+    occ2 = occ.reshape(nt, tile).astype(jnp.int32)
+
+    kernel = functools.partial(_live_kernel, tile=tile)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt, nt),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, tile), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, tile), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((tile, 1), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(nxt2, occ2)
     return out.reshape(nt * tile)[:n]
 
 

@@ -1,0 +1,95 @@
+"""Partition budget properties for every comparison scheme.
+
+Regression tests for two baseline-partitioner bugs: ``_static_partition``
+silently dropped the ``capacity % n`` remainder blocks, and
+``_reuse_intensity_partition`` applied the ``c_min`` clamp *after* the
+proportional floor without re-normalizing, so intensity-skewed mixes could
+allocate more than the budget.  Both must now allocate exactly the budget
+(deterministically), and every scheme in ``SCHEMES`` must respect
+``sum(sizes) <= capacity`` with the per-tenant minimum honored.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (GlobalLRUManager, Trace, build_hit_ratio_function,
+                        make_manager, reuse_distances)
+from repro.core.baselines import (SCHEMES, _reuse_intensity_partition,
+                                  _static_partition)
+from repro.data.traces import msr_trace
+
+
+def _curves(rng, n):
+    hs = []
+    for i in range(n):
+        ln = int(rng.integers(1, 80))
+        t = Trace(rng.integers(0, max(int(rng.integers(1, 12)), 1),
+                               ln).astype(np.int64),
+                  rng.random(ln) < 0.7)
+        hs.append(build_hit_ratio_function(reuse_distances(t, "urd")))
+    return hs
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(1, 8), st.integers(0, 200), st.integers(0, 60),
+       st.integers(0, 10_000))
+def test_reuse_intensity_partition_respects_budget(n, capacity, c_min, seed):
+    hs = _curves(np.random.default_rng(seed), n)
+    part = _reuse_intensity_partition(hs, capacity, 1.0, 20.0, c_min=c_min)
+    assert part.sizes.shape == (n,)
+    assert int(part.sizes.sum()) == capacity      # exact, never over
+    assert np.all(part.sizes >= min(c_min, capacity // n))
+    # deterministic (largest-remainder ties broken by index)
+    again = _reuse_intensity_partition(hs, capacity, 1.0, 20.0, c_min=c_min)
+    assert np.array_equal(part.sizes, again.sizes)
+
+
+def test_reuse_intensity_partition_skew_regression():
+    """The documented overshoot case: two tenants, capacity 10, c_min 5,
+    intensities ~99:1 used to allocate 14 blocks."""
+    rng = np.random.default_rng(0)
+    heavy = Trace(rng.integers(0, 4, 400).astype(np.int64),
+                  np.ones(400, bool))
+    light = Trace(np.array([0, 1, 0], np.int64), np.ones(3, bool))
+    hs = [build_hit_ratio_function(reuse_distances(t, "urd"))
+          for t in (heavy, light)]
+    part = _reuse_intensity_partition(hs, 10, 1.0, 20.0, c_min=5)
+    assert int(part.sizes.sum()) == 10
+    assert np.all(part.sizes >= 5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 9), st.integers(0, 100), st.integers(0, 10_000))
+def test_static_partition_distributes_remainder(n, capacity, seed):
+    hs = _curves(np.random.default_rng(seed), n)
+    part = _static_partition(hs, capacity, 1.0, 20.0)
+    assert int(part.sizes.sum()) == capacity      # remainder not dropped
+    assert int(part.sizes.max() - part.sizes.min()) <= (1 if n > 1 else 0)
+    assert np.all(np.diff(part.sizes) <= 0)       # deterministic: first get +1
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_every_scheme_respects_budget_and_c_min(scheme):
+    names = ["wdev_0", "hm_1", "prn_1", "web_0"]
+    capacity, c_min = 210, 20
+    traces = [msr_trace(nm, 500, seed=i) for i, nm in enumerate(names)]
+    if scheme == "global":
+        mgr = GlobalLRUManager(capacity, names)
+        mgr.run_window(traces)
+        assert mgr.summary()["allocated_blocks"] == capacity
+        return
+    kw = dict(capacity2=400) if scheme == "etica" else {}
+    mgr = make_manager(scheme, capacity, names, c_min=c_min,
+                       initial_blocks=30, **kw)
+    for w in range(2):
+        mgr.run_window([msr_trace(nm, 500, seed=7 * w + i)
+                        for i, nm in enumerate(names)])
+    d = mgr.history[-1]
+    assert int(d.sizes.sum()) <= capacity
+    # c_min honored up to each tenant's useful mass (a tenant whose whole
+    # reuse fits in fewer blocks is never force-fed)
+    floors = np.minimum(c_min, [t.urd_size for t in mgr.tenants])
+    floors = np.minimum(floors, capacity // len(names))
+    assert np.all(d.sizes >= floors), (d.sizes, floors)
+    if scheme == "etica":
+        assert int(d.sizes2.sum()) <= 400

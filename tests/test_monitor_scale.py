@@ -297,11 +297,14 @@ def _pressure_trace():
     return Trace(a, np.ones(6, bool), "pressure")
 
 
-def test_simulate_many_flags_two_level_ro_fallback():
+def test_simulate_many_two_level_ro_pressure_stays_vectorized():
+    # two-level RO pressure replays through the per-level token loop now —
+    # no interpreter fallback (the flag only marks degenerate windows)
     res = simulate_many([_pressure_trace()], capacities=[1],
                         policies=[WritePolicy.RO], capacities2=[1],
                         policies2=[WritePolicy.RO])
-    assert res[0].fallback == 1
+    assert res[0].fallback == 0
+    assert res[0].cache_writes_l2 > 0    # demotions prove the token path
     # single-level RO pressure stays on the vectorized token path
     res1 = simulate_many([_pressure_trace()], capacities=[1],
                          policies=[WritePolicy.RO])
@@ -310,6 +313,12 @@ def test_simulate_many_flags_two_level_ro_fallback():
     res2 = simulate_many([_pressure_trace()], capacities=[1],
                          policies=[WritePolicy.WB], capacities2=[1])
     assert res2[0].fallback == 0
+    # degenerate: warm L2 content behind a dead C2 <= 0 level
+    c2 = LRUCache(0)
+    c2.set_state_arrays(np.array([9], np.int64), np.array([False]))
+    res3 = simulate_many([_pressure_trace()], capacities=[1],
+                         policies=[WritePolicy.RO], caches2=[c2])
+    assert res3[0].fallback == 1
 
 
 def test_manager_counts_ro_fallback_windows():
@@ -319,7 +328,15 @@ def test_manager_counts_ro_fallback_windows():
     t.policy = WritePolicy.RO
     t.cache2 = LRUCache(1)
     mgr.run_window([_pressure_trace()])
-    assert mgr.ro_fallback_windows == 1
+    # pressure windows replay vectorized: the counter stays 0, the
+    # denominator still counts the replayed tenant-window
+    assert mgr.ro_fallback_windows == 0
     assert mgr.tenant_windows == 1
+    assert mgr.summary()["ro_fallback_windows"] == 0
+    assert t.result.fallback == 0
+    # an empty two-level window is the remaining (degenerate) fallback
+    t.cache2 = LRUCache(1)               # keep the second level alive
+    empty = Trace(np.zeros(0, np.int64), np.zeros(0, bool), "empty")
+    mgr.run_window([empty])
+    assert mgr.ro_fallback_windows == 1
     assert mgr.summary()["ro_fallback_windows"] == 1
-    assert t.result.fallback == 1

@@ -136,6 +136,35 @@ def test_shards_sampling_unbiased_scale():
     assert 0.65 < ratio < 1.35, ratio
 
 
+def test_shards_empty_subtrace_well_formed():
+    """A fixed low rate on a tiny window can keep zero accesses: the result
+    must still be a well-formed RDResult (no samples, saturated error bar,
+    ``urd_cache_blocks`` -> 0), for both engines and both kinds."""
+    from repro.core.reuse_distance import shards_keep_mask
+    t = Trace(np.array([5, 6, 5, 7], np.int64),
+              np.array([True, True, False, True]))
+    # find a salt whose hash filter drops every address at this rate
+    salt = next(s for s in range(1, 10_000)
+                if not np.any(shards_keep_mask(t.addrs, 0.001, s)))
+    for kind in ("trd", "urd"):
+        for engine in ("fast", "fenwick"):
+            r = sampled_reuse_distances(t, kind, rate=0.001, salt=salt,
+                                        engine=engine)
+            assert r.distances.shape == (4,)
+            assert np.all(r.distances == -1)
+            assert r.samples.size == 0
+            assert r.rate == 0.001
+            assert r.expected_error == 1.0
+            assert max_rd(r) == -1
+            assert urd_cache_blocks(r) == 0
+            assert r.histogram().tolist() == [0]
+    # an empty input trace is exact by definition (no sampling noise)
+    empty = Trace(np.zeros(0, np.int64), np.zeros(0, bool))
+    r = sampled_reuse_distances(empty, "urd", rate=0.001, salt=1)
+    assert r.distances.size == 0 and r.expected_error == 0.0
+    assert urd_cache_blocks(r) == 0
+
+
 def test_accel_matches_exact():
     from repro.kernels.urd_scan.ops import reuse_distances_accel
     rng = np.random.default_rng(2)
