@@ -17,13 +17,17 @@ on synthetic mixes, three ways:
 
 Checks: fused ≡ seed allocations at every scale; sampled allocations
 within 5% aggregate latency of exact both on the synthetic mixes and on
-the Table-3 workloads (prxy_0/prn_1/hm_1/web_1, default auto-tuner); and
-≥50× seed→sampled speedup at 1024 tenants (full mode only).  Results are
-written to ``BENCH_monitor_scale.json``.
+the Table-3 workloads (prxy_0/prn_1/hm_1/web_1, default auto-tuner);
+≥50× seed→sampled speedup at 1024 tenants (full mode only); and — the
+segment-aligned-padding gate — the **exact fused path must beat the
+per-tenant loop outright**: ``speedup_fused >= 2.0`` at the largest
+tenant count of the run (``fused_speedup_ge: 2.0`` in the emitted
+``checks``).  Results are written to ``BENCH_monitor_scale.json``.
 
 ``--smoke`` (the CI configuration) runs the 16-tenant point only with a
 short window — fast, and still fails on any control-plane hot-path
-regression (equality/latency checks, not the speedup).
+regression, *including* the fused-speedup gate (seed and fused are
+best-of-reps there to damp CI wall-clock noise).
 """
 from __future__ import annotations
 
@@ -83,24 +87,29 @@ def fused_path(traces, capacity, c_min, sample_rate=None, target=256,
 
 
 def run_scale(n_tenants: int, n: int, c_min: int = 50,
-              reps: int = 3) -> dict:
+              reps: int = 3, engine_reps: int = 1) -> dict:
     traces = synthetic_mix(n_tenants, n, seed=7)
     # capacity between Σc_min and ΣURD so the partitioner actually walks
     urd_total = sum(h.max_useful_size
                     for h in analyze_windows(traces, "urd").curves)
     capacity = max(n_tenants * c_min + 1, int(0.35 * urd_total))
 
-    t0 = time.perf_counter()
-    p_seed, hs_exact = seed_path(traces, capacity, c_min)
-    seed_s = time.perf_counter() - t0
+    # seed/fused are seconds-long at scale and stable single-shot; the
+    # smoke configuration raises engine_reps (best-of) because its
+    # millisecond-scale runs would otherwise flake the speedup gate on
+    # noisy CI boxes
+    seed_s = fused_s = float("inf")
+    for _ in range(engine_reps):
+        t0 = time.perf_counter()
+        p_seed, hs_exact = seed_path(traces, capacity, c_min)
+        seed_s = min(seed_s, time.perf_counter() - t0)
 
-    t0 = time.perf_counter()
-    p_fused, _ = fused_path(traces, capacity, c_min)
-    fused_s = time.perf_counter() - t0
+    for _ in range(engine_reps):
+        t0 = time.perf_counter()
+        p_fused, _ = fused_path(traces, capacity, c_min)
+        fused_s = min(fused_s, time.perf_counter() - t0)
 
-    # wall clock is noisy on small boxes and the sampled decision runs in
-    # milliseconds: take best-of-reps (seed/fused are seconds-long and
-    # stable enough single-shot)
+    # the sampled decision runs in milliseconds: always take best-of-reps
     sampled_s = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
@@ -157,24 +166,31 @@ def table3_decision_check(n: int = 8000, target: int = 4096) -> dict:
 def main(tenant_counts=(16, 128, 1024), n_per_window: int = 8000,
          smoke: bool = False) -> dict:
     _accel_default()          # warm the jax backend probe outside timings
+    engine_reps = 1
     if smoke:
-        tenant_counts, n_per_window = (16,), 2000
-    rows = [run_scale(t, n_per_window) for t in tenant_counts]
+        tenant_counts, n_per_window, engine_reps = (16,), 2000, 3
+    rows = [run_scale(t, n_per_window, engine_reps=engine_reps)
+            for t in tenant_counts]
     # smoke shrinks the tuner target so the sampled path is actually
     # exercised (rate < 1) on the short CI windows
     t3 = (table3_decision_check(2000, target=512) if smoke
           else table3_decision_check(8000))
+    # the padding gate: the exact fused pass must beat the per-tenant
+    # loop outright at the largest scale of the run (2x, not just parity)
+    big = max(rows, key=lambda r: r["tenants"])
     checks = {
         "fused_bit_identical_all": all(r["fused_bit_identical"]
                                        for r in rows),
         "sampled_within_5pct_mix": all(r["sampled_latency_ratio"] <= 1.05
                                        for r in rows),
         "table3_sampled_within_5pct": t3["within_5pct"],
+        "fused_speedup_ge": big["speedup_fused"] >= 2.0,
     }
     if 1024 in tenant_counts:
         big = next(r for r in rows if r["tenants"] == 1024)
         checks["speedup_1024_ge_50x"] = big["speedup_sampled"] >= 50.0
-    out = {"rows": rows, "table3": t3, "checks": checks}
+    out = {"rows": rows, "table3": t3,
+           "checks": checks, "fused_speedup_gate": 2.0}
     with open("BENCH_monitor_scale.json", "w") as f:
         json.dump(out, f, indent=2)
     for k, v in checks.items():
@@ -185,8 +201,9 @@ def main(tenant_counts=(16, 128, 1024), n_per_window: int = 8000,
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI configuration: 16 tenants, short windows, "
-                         "equality/latency checks only")
+                    help="CI configuration: 16 tenants, short windows; "
+                         "equality/latency checks plus the fused-speedup "
+                         "gate (best-of-reps wall clock)")
     ap.add_argument("--tenants", type=str, default=None,
                     help="comma-separated tenant counts (default 16,128,1024)")
     args = ap.parse_args()

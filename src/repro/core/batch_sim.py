@@ -145,6 +145,8 @@ from repro.core.write_policy import WritePolicy
 
 __all__ = [
     "count_prev_ge",
+    "count_prev_ge_padded",
+    "padded_segment_layout",
     "stack_distances",
     "reuse_distances_fast",
     "ro_token_replay_device",
@@ -152,6 +154,15 @@ __all__ = [
     "simulate_batch",
     "simulate_many",
 ]
+
+# every padded segment width is a power of two and a multiple of the dense
+# base-level block, so the base pass never spans two segments (64 trades a
+# little dense work for two fewer sort-merge levels)
+_PAD_MIN = 64
+# single-tape ``count_prev_ge`` switches to the width-bounded sort-merge
+# levels once the tape is long enough that searchsorted's global binary
+# searches (log n probes over the whole tape per element) dominate
+_SORT_MERGE_MIN = 1 << 15
 
 
 # --------------------------------------------------------------- primitives
@@ -164,11 +175,22 @@ def count_prev_ge(y: np.ndarray) -> np.ndarray:
     (composite keys while blocks are many, a python loop once they are
     few) for wide ones.  O(n log² n) array work, int32 throughout, no
     per-element Python loop.  Requires ``0 <= y < 2**31 - 2``.
+
+    Long tapes take the sort-merge level engine instead (the degenerate
+    one-segment case of ``count_prev_ge_padded``): same counts, but each
+    merge level is one SIMD ``np.sort`` of packed (value, side, position)
+    keys instead of a global-array ``searchsorted``.
     """
     m = int(y.shape[0])
     out = np.zeros(m, dtype=np.int64)
     if m <= 1:
         return out
+    if m >= _SORT_MERGE_MIN:
+        w = _next_pow2(m)
+        yp = np.zeros(w, dtype=np.int64)
+        yp[:m] = np.asarray(y, dtype=np.int64) + 1   # pads sort below all
+        return count_prev_ge_padded(
+            yp, np.array([w], dtype=np.int64))[:m].astype(np.int64)
     y = y.astype(np.int32)
     base = np.int64(int(y.max()) + 2)
 
@@ -219,6 +241,145 @@ def count_prev_ge(y: np.ndarray) -> np.ndarray:
     return out
 
 
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(x) - 1, 0).bit_length()
+
+
+def padded_segment_layout(bounds: np.ndarray):
+    """Segment-aligned power-of-two padding for a multi-segment tape.
+
+    Each non-empty segment of ``bounds`` is padded to the next power of two
+    (min ``_PAD_MIN``) and the padded segments are laid out in descending
+    width order — prefix sums of descending powers of two are multiples of
+    every following width, so **every segment starts at a multiple of its
+    own padded width**.  A merge tree that stops at each segment's width
+    therefore never builds a block spanning two segments.
+
+    Returns ``(src, tpos, base_src, base_pad, widths, total)``:
+
+      src      int[k]    original tape positions of the real entries,
+                         grouped by segment in padded-layout order — or
+                         ``None`` when the layout keeps the original
+                         segment order AND the tape has no empty segments,
+                         i.e. ``src`` would be ``arange`` (callers skip
+                         their gathers)
+      tpos     int[k]    their positions on the padded tape
+      base_src int[k]    per-entry original segment start
+      base_pad int[k]    per-entry padded segment start
+      widths   int64[g]  padded width per non-empty segment (descending)
+      total    int       padded tape length (``widths.sum()``)
+      starts   int64[g]  original tape start per non-empty segment, in
+                         the same (descending-width) layout order
+
+    Index arrays are int32 when everything fits (half the gather traffic).
+    """
+    bounds = np.asarray(bounds, dtype=np.int64)
+    lens = np.diff(bounds)
+    act = np.flatnonzero(lens > 0)
+    if act.size == 0:
+        z = np.zeros(0, dtype=np.int64)
+        return z, z, z, z, z, 0, z
+    L = lens[act]
+    W = (1 << np.ceil(np.log2(L)).astype(np.int64))
+    W = np.where(W < L, W * 2, W)                # guard float rounding
+    W = np.maximum(W, _PAD_MIN)
+    order = np.argsort(-W, kind="stable")        # descending, ties stable
+    Ws, Ls, segs = W[order], L[order], act[order]
+    total = int(Ws.sum())
+    row_base = np.concatenate([[0], np.cumsum(Ws)[:-1]]).astype(np.int64)
+    csl = np.concatenate([[0], np.cumsum(Ls)[:-1]]).astype(np.int64)
+    k = int(Ls.sum())
+    idt = np.int32 if max(total, int(bounds[-1])) < 2**31 else np.int64
+    loc = np.arange(k, dtype=idt) - np.repeat(csl.astype(idt), Ls)
+    base_src = np.repeat(bounds[segs].astype(idt), Ls)
+    base_pad = np.repeat(row_base.astype(idt), Ls)
+    identity = (act.size == lens.size and int(bounds[0]) == 0
+                and bool(np.all(W[:-1] >= W[1:])))
+    src = None if identity else base_src + loc
+    return src, base_pad + loc, base_src, base_pad, Ws, total, bounds[segs]
+
+
+def count_prev_ge_padded(y: np.ndarray, seg_widths: np.ndarray) -> np.ndarray:
+    """Width-bounded merge-tree counting on a padded, segment-aligned tape.
+
+    ``y.size == seg_widths.sum()``; widths are powers of two
+    ``>= _PAD_MIN`` in descending order and every width-W segment starts
+    at a multiple of W (``padded_segment_layout``).  Returns, per position q,
+    ``#{ j < q, same segment : y[j] >= y[q] }``: the merge recursion for a
+    segment stops at its own padded width, so no merge level ever spans two
+    segments and the deep global levels of the unpadded tree (whose
+    contributions to in-segment queries provably cancel — see
+    ``repro.core.monitor``) are simply never built.  Padding entries must
+    carry ``y = 0`` with every real entry ``>= 1``; a pad then sorts below
+    every real query and contributes nothing to its >=-count.
+
+    Each level is one SIMD ``np.sort`` over packed
+    ``(value << pb+1) | (is_left << pb) | local_position`` keys: after the
+    sort, the k-th right-half element of a block at merged position p has
+    exactly ``p - k`` strictly-smaller left elements (equal-valued lefts
+    pack *above* rights, so ties count toward >=), and its own local
+    position rides along in the low bits for the scatter back — no
+    ``argsort`` and no ``searchsorted`` anywhere.  Counts are returned as
+    int32 (they never exceed the segment width); tapes must be shorter
+    than 2**31.
+    """
+    m = int(y.shape[0])
+    if m == 0:
+        return np.zeros(0, dtype=np.int32)
+    seg_widths = np.asarray(seg_widths, dtype=np.int64)
+    wmax = int(seg_widths[0])
+    y = np.asarray(y)
+    ymax = int(y.max(initial=0))
+    vb = max(ymax.bit_length(), 1)                    # value bits
+    pb = (wmax - 1).bit_length()                      # local-position bits
+    kdt = np.int32 if vb + pb + 2 <= 32 else np.int64
+    yk = y.astype(kdt, copy=False)
+    # counts never exceed the segment width, and every index fits int32:
+    # the whole pass runs in int32 to halve the memory traffic
+    out = np.zeros(m, dtype=np.int32)
+    # base level: dense all-pairs inside _PAD_MIN-blocks (every width
+    # divides into whole blocks, so the dense pass never spans segments),
+    # column-transposed so each of the B0(B0-1)/2 compares is contiguous
+    blk_t = np.ascontiguousarray(yk.reshape(-1, _PAD_MIN).T)
+    cnt_t = np.zeros(blk_t.shape, dtype=np.int32)
+    for q in range(1, _PAD_MIN):
+        cq, bq = cnt_t[q], blk_t[q]
+        for j in range(q):
+            cq += blk_t[j] >= bq
+    out[:] = cnt_t.T.ravel()
+    if wmax <= _PAD_MIN:
+        return out
+    ysh = yk << (pb + 1)                              # value field, reused
+    csw = np.cumsum(seg_widths)
+    iota = np.arange(m // 2, dtype=np.int32)
+    kbuf = np.empty(m, dtype=kdt)                     # per-level scratch:
+    abuf = np.empty(m, dtype=kdt)                     # reused allocations
+    mbuf = np.empty(m, dtype=bool)
+    s = _PAD_MIN
+    while s < wmax:
+        w = 2 * s
+        # segments narrower than 2s have finished merging; the live
+        # prefix of the descending-width layout is exactly width >= 2s
+        n_seg = int(np.searchsorted(-seg_widths, -w, side="right"))
+        mlvl = int(csw[n_seg - 1])
+        nb = mlvl // w
+        lpos = np.arange(w, dtype=kdt)
+        combo = ((lpos < s).astype(kdt) << pb) | lpos
+        kv = kbuf[:mlvl].reshape(nb, w)
+        np.bitwise_or(ysh[:mlvl].reshape(nb, w), combo[None, :], out=kv)
+        kv.sort(axis=1)                               # in-place SIMD sort
+        M = kbuf[:mlvl]
+        np.bitwise_and(M, kdt(1 << pb), out=abuf[:mlvl])
+        np.equal(abuf[:mlvl], 0, out=mbuf[:mlvl])
+        pf = np.flatnonzero(mbuf[:mlvl]).astype(np.int32)
+        n_ge = np.int32(s) - ((pf & np.int32(w - 1))
+                              - (iota[: pf.size] & np.int32(s - 1)))
+        tgt = (pf & np.int32(-w)) + (M[pf] & np.int32((1 << pb) - 1))
+        out[tgt] += n_ge
+        s = w
+    return out
+
+
 def _coverage_counts(nxt: np.ndarray) -> np.ndarray:
     """F[i] = #{ j < i : nxt[j] >= i } via a difference array, O(n)."""
     n = nxt.shape[0]
@@ -228,30 +389,75 @@ def _coverage_counts(nxt: np.ndarray) -> np.ndarray:
     return np.cumsum(d)[:n + 1]
 
 
+def _stack_distances_padded(prev: np.ndarray, nxt: np.ndarray,
+                            bounds: np.ndarray,
+                            layout=None) -> np.ndarray:
+    """Exact SD for a multi-segment tape via the padded pow2 layout.
+
+    One width-bounded counting pass covers every segment at once: real
+    entries carry their segment-local ``nxt`` (>= 1), padding entries the
+    sentinel ``y = 0`` / empty coverage interval, so the padded tape is
+    bit-identical to running each segment alone (property-tested in
+    ``tests/test_monitor_padding.py``).
+    """
+    n = prev.shape[0]
+    sd = np.full(n, -1, dtype=np.int64)
+    src, tpos, base_src, base_pad, widths, total, _ = \
+        layout if layout is not None else padded_segment_layout(bounds)
+    if tpos.size == 0:
+        return sd
+    # F needs no padded tape: on the severed/clamped original tape a
+    # cross-segment interval can only reach a segment's *first* position
+    # (which is cold), so the global coverage count equals the
+    # segment-local one at every hot access — the same cancellation
+    # argument as the merge tree's (see repro.core.monitor)
+    F = _coverage_counts(nxt)
+    gy = np.zeros(total, dtype=np.int32 if total < 2**31 else np.int64)
+    if src is None:                              # layout kept tape order
+        gy[tpos] = nxt - base_src                # local nxt in [1, L]
+        cnt = count_prev_ge_padded(gy, widths)
+        sh = np.flatnonzero(prev >= 0)
+        gprev = (tpos[sh] - sh).astype(np.int64) + prev[sh]
+        sd[sh] = F[sh] - (cnt[gprev] + 1)
+        return sd
+    gy[tpos] = nxt[src] - base_src               # assignment casts in place
+    cnt = count_prev_ge_padded(gy, widths)
+    pl = prev[src]
+    hot = pl >= 0
+    gprev = (tpos[hot] - src[hot]).astype(np.int64) + pl[hot]
+    sh = src[hot]                                # same in-segment offset
+    sd[sh] = F[sh] - (cnt[gprev] + 1)
+    return sd
+
+
 def _stack_distances_host(prev: np.ndarray, nxt: np.ndarray,
-                          bounds: np.ndarray | None = None) -> np.ndarray:
+                          bounds: np.ndarray | None = None,
+                          layout=None) -> np.ndarray:
     """Exact SD per access (occupancy = every access); -1 for cold.
 
     ``bounds`` (optional) splits the tape into independent contiguous
-    blocks (one per tenant: links never cross), processed one at a time so
-    each tenant's working set stays cache-resident.
+    blocks (one per tenant: links never cross).  Multi-segment tapes go
+    through the segment-aligned padded layout — one width-bounded counting
+    pass for all tenants, no per-segment Python loop (see
+    ``padded_segment_layout`` / ``count_prev_ge_padded``); callers that
+    already hold the tape's ``padded_segment_layout`` pass it as
+    ``layout`` to avoid recomputing it.
     """
     n = prev.shape[0]
     sd = np.full(n, -1, dtype=np.int64)
     if n == 0:
         return sd
-    if bounds is None:
-        bounds = np.array([0, n], dtype=np.int64)
-    for s, e in zip(bounds[:-1], bounds[1:]):
-        s, e = int(s), int(e)
-        if e <= s:
-            continue
-        pl = prev[s:e]
-        nl = nxt[s:e] - s
-        F = _coverage_counts(nl)
-        cnt = count_prev_ge(nl)
-        idx = np.flatnonzero(pl >= 0)            # links never cross blocks
-        sd[s + idx] = F[idx] - (cnt[pl[idx] - s] + 1)
+    if bounds is not None and len(bounds) > 2:
+        return _stack_distances_padded(prev, nxt, bounds, layout)
+    s, e = (0, n) if bounds is None else (int(bounds[0]), int(bounds[-1]))
+    if e <= s:
+        return sd
+    pl = prev[s:e]
+    nl = nxt[s:e] - s
+    F = _coverage_counts(nl)
+    cnt = count_prev_ge(nl)
+    idx = np.flatnonzero(pl >= 0)                # links never cross blocks
+    sd[s + idx] = F[idx] - (cnt[pl[idx] - s] + 1)
     return sd
 
 

@@ -6,19 +6,41 @@ the control plane — not the simulated I/O — dominated at the ROADMAP's
 thousand-tenant scale.  ``analyze_windows`` replaces that loop with batched
 array code end to end:
 
-  * **One tape.**  All tenants' Δt window traces are concatenated into a
-    single access tape with per-tenant segment offsets.  Occurrence links
-    are severed at segment boundaries and ``nxt`` is clamped to the segment
-    end, so one merge-tree stack-distance pass (``batch_sim``'s
-    ``_stack_distances_host`` / the ``cache_sim`` kernel on TPU) yields
-    every tenant's exact window reuse distances at once — the cross-segment
-    dominance contributions provably cancel (a clamped link never reaches
-    into the next segment).
+  * **One padded tape.**  All tenants' Δt window traces are concatenated
+    into a single access tape with per-tenant segment offsets.  Occurrence
+    links are severed at segment boundaries and ``nxt`` is clamped to the
+    segment end, and the counting pass lays the segments out
+    **power-of-two padded and self-aligned** (``batch_sim``'s
+    ``padded_segment_layout``: each segment padded to the next power of
+    two, segments ordered by descending padded width so every segment
+    starts at a multiple of its own width).  The merge-tree stack-distance
+    recursion then *stops at each segment's padded width*, so no merge
+    level ever spans two tenants and the deep global-tape levels — which
+    made the pre-padding fused pass *lose* to the per-tenant loop at 8M
+    accesses — are never built at all.
+
+    *Why padding is exact.*  Padding entries carry sentinel occurrence
+    links (``prev = -1``, an empty coverage interval, counting value 0
+    below every real segment-local ``nxt >= 1``), so a pad never enters a
+    real access's dominance count — the same cancellation argument as the
+    boundary severing: ``SD(i) = F(i) - G(i)`` only ever queries positions
+    inside ``i``'s own segment, every cross-segment or pad contribution to
+    ``F`` and ``G`` is identically zero there (a clamped link never
+    reaches past its segment, a pad's interval is empty), and inside a
+    self-aligned segment the width-bounded tree performs exactly the
+    merges the segment-alone tree would.  The padded pass is therefore
+    bit-identical to the per-tenant path — property-tested across
+    adversarial shapes in ``tests/test_monitor_padding.py``.
+
+    On TPU hosts the padded tape routes through the ``cache_sim`` ops
+    layer instead (``stack_distances_segments_accel``): one Pallas kernel
+    launch per distinct padded width, each with its grid restricted to the
+    segment-aligned (i, j) blocks.
   * **Segment reductions.**  URD/TRD sample histograms, hit-ratio curves
-    (``build_hit_ratio_functions``: one lexsort for all tenants, stacked
-    breakpoint arrays), Alg.-3 write ratios (re-touch writes per tenant =
-    one ``bincount``) and URD-based sizes all come from the same pass — no
-    per-tenant Python loop anywhere.
+    (``build_hit_ratio_functions``: one composite-key sort for all
+    tenants, stacked breakpoint arrays), Alg.-3 write ratios (re-touch
+    writes per tenant = one ``bincount``) and URD-based sizes all come
+    from the same pass — no per-tenant Python loop anywhere.
   * **SHARDS end-to-end.**  With ``sample_rate`` set (a float, or
     ``"auto"`` for the target-sample-count tuner) the tape is spatially
     filtered *before* counting — hash salts are seed-stabilized per
@@ -43,7 +65,8 @@ import dataclasses
 
 import numpy as np
 
-from repro.core.batch_sim import _accel_default, _stack_distances_host
+from repro.core.batch_sim import (_accel_default, _stack_distances_host,
+                                  padded_segment_layout)
 from repro.core.mrc import BatchedHitRatioFunctions, build_hit_ratio_functions
 from repro.core.reuse_distance import (auto_sample_rate, shards_keep_mask,
                                        shards_salt)
@@ -77,36 +100,98 @@ class MonitorResult:
 
 
 def _segment_links(addrs: np.ndarray, tid: np.ndarray,
-                   bounds: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+                   bounds: np.ndarray,
+                   layout=None) -> tuple[np.ndarray, np.ndarray]:
     """prev/next occurrence links on a multi-tenant tape, severed at
-    segment boundaries; ``nxt`` clamped to the owning segment's end."""
+    segment boundaries; ``nxt`` clamped to the owning segment's end.
+
+    Runs on the same segment-aligned padded layout as the counting pass:
+    ``(addr + 1) << pb | local_position`` keys are scattered onto the
+    padded tape (pads carry key 0, sorting below every real entry and
+    severing runs automatically) and each width group is one in-place SIMD
+    row sort — adjacent equal-address entries of a row are then exactly
+    the occurrence pairs.  No global ``argsort``: the value sort plus a
+    handful of O(m) passes replaces it.  Falls back to the composite-key
+    argsort for negative or enormous address spaces.
+    """
     m = addrs.shape[0]
-    lo = int(addrs.min(initial=0))
-    big = int(addrs.max(initial=0)) + 1 - min(lo, 0)
-    n_seg = int(tid[-1]) + 1 if m else 1
-    if lo < 0 or n_seg * big >= 2**62:       # composite key would overflow
-        order = np.lexsort((addrs, tid))
-    else:
-        order = np.argsort(tid * big + addrs, kind="stable")
-    sa, st = addrs[order], tid[order]
-    same = np.zeros(m, dtype=bool)
-    same[1:] = (sa[1:] == sa[:-1]) & (st[1:] == st[:-1])
     prev = np.full(m, -1, dtype=np.int64)
-    prev[order[1:]] = np.where(same[1:], order[:-1], -1)
-    nxt = np.full(m, m, dtype=np.int64)
-    nxt[order[:-1]] = np.where(same[1:], order[1:], m)
-    end_of = np.repeat(bounds[1:], np.diff(bounds))
-    return prev, np.minimum(nxt, end_of)
+    nxt = np.repeat(bounds[1:], np.diff(bounds))     # default: segment end
+    if m == 0:
+        return prev, nxt
+    lo = int(addrs.min(initial=0))
+    amax = int(addrs.max(initial=0))
+    src, tpos, base_src, base_pad, widths, total, seg_starts = \
+        layout if layout is not None else padded_segment_layout(bounds)
+    pb = int(widths[0] - 1).bit_length()             # local-position bits
+    vb = (amax - min(lo, 0) + 1).bit_length()        # address field bits
+    if lo < 0 or vb + pb > 62:
+        # composite key would overflow: legacy sort path
+        big = amax + 1 - min(lo, 0)
+        n_seg = int(tid[-1]) + 1
+        same = np.zeros(m, dtype=bool)
+        if lo < 0 or n_seg * big >= 2**62:
+            order = np.lexsort((addrs, tid))
+            sa, st = addrs[order], tid[order]
+            same[1:] = (sa[1:] == sa[:-1]) & (st[1:] == st[:-1])
+        else:
+            key = tid * big + addrs
+            order = np.argsort(key, kind="stable")
+            sk = key[order]                  # one gather serves the compare
+            same[1:] = sk[1:] == sk[:-1]
+        prev[order[1:]] = np.where(same[1:], order[:-1], -1)
+        nxt_full = np.full(m, m, dtype=np.int64)
+        nxt_full[order[:-1]] = np.where(same[1:], order[1:], m)
+        return prev, np.minimum(nxt_full, nxt)
+    kdt = np.int32 if vb + pb <= 31 else np.int64
+    gk = np.zeros(total, dtype=kdt)
+    loc = (tpos - base_pad).astype(kdt)
+    av = (addrs if src is None else addrs[src]).astype(kdt)
+    gk[tpos] = ((av + kdt(1)) << pb) | loc
+    # one in-place SIMD row sort per distinct width (contiguous, aligned)
+    csw = np.concatenate([[0], np.cumsum(widths)]).astype(np.int64)
+    heads = np.flatnonzero(
+        np.concatenate([[True], widths[1:] != widths[:-1]]))
+    for h0, h1 in zip(heads, np.append(heads[1:], widths.size)):
+        glo, ghi = int(csw[h0]), int(csw[int(h1)])
+        w = int(widths[h0])
+        gk[glo:ghi].reshape(-1, w).sort(axis=1)
+    H = gk >> pb                                     # 0 at pads
+    # adjacent equal addresses inside a row = occurrence pairs; rows are
+    # severed explicitly, pads sever themselves (H == 0 < every real)
+    pair = np.empty(total, dtype=bool)
+    pair[0] = False
+    np.equal(H[1:], H[:-1], out=pair[1:])
+    pair[1:] &= H[1:] > 0
+    pair[csw[:-1]] = False                           # row starts
+    # decode original tape positions of the sorted entries (pads decode to
+    # their row's start; harmless — they never appear in a pair)
+    P = (gk & kdt((1 << pb) - 1)).astype(np.int64)
+    P += np.repeat(seg_starts, widths)
+    iv = np.flatnonzero(pair)                        # pair = (iv - 1, iv)
+    prev[P[iv]] = P[iv - 1]
+    nxt[P[iv - 1]] = P[iv]
+    return prev, nxt
 
 
-def _sd_pass(prev: np.ndarray, nxt_c: np.ndarray, backend: str) -> np.ndarray:
-    """One stack-distance counting pass over the whole tape."""
+def _sd_pass(prev: np.ndarray, nxt_c: np.ndarray, backend: str,
+             bounds: np.ndarray | None = None,
+             layout=None) -> np.ndarray:
+    """One width-bounded stack-distance counting pass over the whole tape.
+
+    ``bounds`` carries the per-tenant segment offsets so both backends can
+    use the segment-aligned padded layout (host: width-bounded merge tree;
+    accel: width-restricted kernel grids) instead of paying the full
+    global merge depth; ``layout`` is the tape's precomputed
+    ``padded_segment_layout`` (shared with the link construction).
+    """
     if backend == "auto":
         backend = "accel" if _accel_default() else "host"
     if backend == "accel":
         from repro.kernels.cache_sim.ops import stack_distances_segments_accel
-        return stack_distances_segments_accel(prev, nxt_c)
-    return _stack_distances_host(prev, nxt_c)
+        return stack_distances_segments_accel(prev, nxt_c, bounds=bounds,
+                                              layout=layout)
+    return _stack_distances_host(prev, nxt_c, bounds=bounds, layout=layout)
 
 
 def _urd_sizes(dist: np.ndarray, tid: np.ndarray, n_tenants: int,
@@ -181,15 +266,18 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
             # compact tenant ids so segment ends line up on the sub-tape
             remap = np.zeros(n, dtype=np.int64)
             remap[need] = np.arange(len(need))
+            sub_bounds = sub_bounds.astype(np.int64)
+            layout = padded_segment_layout(sub_bounds)
             prev, nxt_c = _segment_links(sub_addr, remap[sub_tid],
-                                         sub_bounds.astype(np.int64))
-            dist[sel] = _sd_pass(prev, nxt_c, backend)
-        hot_w = (dist >= 0) & ~is_read
-        wr = (np.bincount(tid[hot_w], minlength=n)
+                                         sub_bounds, layout)
+            dist[sel] = _sd_pass(prev, nxt_c, backend, sub_bounds, layout)
+        hot = dist >= 0
+        wr = (np.bincount(tid[hot & ~is_read], minlength=n)
               / np.maximum(lens, 1))
-        if kind == "urd":
-            dist = np.where(is_read, dist, -1)
-        curves = build_hit_ratio_functions(dist, tid, n, lens)
+        smask = (hot & is_read) if kind == "urd" else hot
+        if kind == "urd" and percentile < 100.0:
+            dist = np.where(smask, dist, -1)     # rare: per-segment slices
+        curves = build_hit_ratio_functions(dist, tid, n, lens, mask=smask)
         urd = _urd_sizes(dist, tid, n, bounds, percentile, curves)
         return MonitorResult(curves, urd, wr, np.ones(n),
                              np.zeros(n), kind)
@@ -220,8 +308,9 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
         addrs_s = np.zeros(0, np.int64)
         read_s = np.zeros(0, bool)
     tid_s = np.repeat(np.arange(n, dtype=np.int64), kept)
-    prev, nxt_c = _segment_links(addrs_s, tid_s, sub_bounds)
-    sd = _sd_pass(prev, nxt_c, backend)
+    layout = padded_segment_layout(sub_bounds)
+    prev, nxt_c = _segment_links(addrs_s, tid_s, sub_bounds, layout)
+    sd = _sd_pass(prev, nxt_c, backend, sub_bounds, layout)
     rate_s = rates[tid_s]
     dist = np.where(sd >= 0, np.round(sd / np.maximum(rate_s, 1e-300)
                                       ).astype(np.int64), -1)

@@ -38,7 +38,12 @@ Engines:
                                 like 1/sqrt(kept samples)).
 
 The fused thousand-tenant path (all tenants' windows analyzed in one
-counting pass, exact or sampled) lives in ``repro.core.monitor``.
+counting pass, exact or sampled) lives in ``repro.core.monitor``; its
+counting core is the **width-bounded** merge tree of
+``repro.core.batch_sim`` (``count_prev_ge`` / ``count_prev_ge_padded``):
+segments are power-of-two padded and self-aligned so the merge recursion
+stops at each segment's width, and long single tapes take the same
+sort-merge level engine — ``reuse_distances_fast`` rides on it directly.
 """
 from __future__ import annotations
 

@@ -25,7 +25,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import tpu_compiler_params
 
-__all__ = ["cache_sim_scan", "cache_sim_levels_scan", "live_count_scan"]
+__all__ = ["cache_sim_scan", "cache_sim_segments_scan",
+           "cache_sim_levels_scan", "live_count_scan"]
 
 
 def _kernel(prev_ref, nxt_ref, occ_ref, out_ref, acc_scr, *, tile: int):
@@ -87,6 +88,86 @@ def cache_sim_scan(prev: jax.Array, nxt: jax.Array, occ: jax.Array, *,
             pl.BlockSpec((1, tile), lambda i, j: (i, 0)),
             pl.BlockSpec((1, tile), lambda i, j: (j, 0)),
             pl.BlockSpec((1, tile), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, tile), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((tile, 1), jnp.float32)],
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(prev2, nxt2, occ2)
+    return out.reshape(nt * tile)[:n]
+
+
+def _segments_kernel(prev_ref, nxt_ref, occ_ref, out_ref, acc_scr, *,
+                     tile: int, seg_width: int):
+    ii = pl.program_id(0)
+    jj = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(jj == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    prev_i = prev_ref[0]                                 # [1, tile] int32
+    # the j plane is restricted to the i-tile's seg_width-aligned block
+    j_base = (ii * tile) // seg_width * seg_width + jj * tile
+    i_idx = ii * tile + jax.lax.broadcasted_iota(
+        jnp.int32, (tile, tile), 0)                      # rows: i
+    j_idx = j_base + jax.lax.broadcasted_iota(
+        jnp.int32, (tile, tile), 1)                      # cols: j
+    nxt_j = nxt_ref[0]                                   # [1, tile] int32
+    occ_j = occ_ref[0]                                   # [1, tile] int32
+
+    contrib = (
+        (j_idx > prev_i.reshape(tile, 1))
+        & (j_idx < i_idx)
+        & (nxt_j.reshape(1, tile) >= i_idx)
+        & (occ_j.reshape(1, tile) > 0)
+    )
+    acc_scr[...] += jnp.sum(contrib.astype(jnp.float32), axis=1,
+                            keepdims=True)
+
+    @pl.when(jj == nj - 1)
+    def _finalize():
+        out_ref[0] = acc_scr[...].reshape(tile).astype(jnp.int32)
+
+
+def cache_sim_segments_scan(prev: jax.Array, nxt: jax.Array, occ: jax.Array,
+                            *, seg_width: int, tile: int = 256,
+                            interpret: bool = False) -> jax.Array:
+    """``cache_sim_scan`` on a segment-aligned padded tape, restricted grid.
+
+    The tape (length a multiple of ``seg_width``) holds one padded segment
+    per ``seg_width``-aligned block (``batch_sim.padded_segment_layout``
+    guarantees alignment), links are severed at segment boundaries and
+    padding rows carry ``occ = 0``, so counting windows never cross blocks
+    and every (i, j) tile outside the i-tile's own block contributes
+    exactly zero (the dense proof lives in ``cache_sim_segments_ref``).
+    The grid therefore shrinks from ``nt x nt`` to
+    ``nt x (seg_width / tile)`` — the j loop visits only the aligned
+    block, the kernel body is ``_kernel`` with the absolute j base offset.
+    Cold and padding rows return prefix counts — callers mask them.
+    """
+    n = prev.shape[0]
+    if seg_width < tile:
+        tile = int(seg_width)                # pow2 >= 16: still a valid tile
+    nt = n // tile
+    jt = seg_width // tile
+    prev2 = prev.reshape(nt, tile).astype(jnp.int32)
+    nxt2 = nxt.reshape(nt, tile).astype(jnp.int32)
+    occ2 = occ.reshape(nt, tile).astype(jnp.int32)
+
+    kernel = functools.partial(_segments_kernel, tile=tile,
+                               seg_width=seg_width)
+    j_map = lambda i, j: ((i * tile) // seg_width * jt + j, 0)  # noqa: E731
+    out = pl.pallas_call(
+        kernel,
+        grid=(nt, jt),
+        in_specs=[
+            pl.BlockSpec((1, tile), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tile), j_map),
+            pl.BlockSpec((1, tile), j_map),
         ],
         out_specs=pl.BlockSpec((1, tile), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nt, tile), jnp.int32),

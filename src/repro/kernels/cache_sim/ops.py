@@ -14,13 +14,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.cache_sim.kernel import (cache_sim_levels_scan,
-                                            cache_sim_scan, live_count_scan)
+                                            cache_sim_scan,
+                                            cache_sim_segments_scan,
+                                            live_count_scan)
 from repro.kernels.cache_sim.ref import (cache_sim_levels_ref, cache_sim_ref,
+                                         cache_sim_segments_ref,
                                          live_counts_delta)
 
-__all__ = ["cache_sim_op", "cache_sim_levels_op", "live_count_op",
-           "stack_distances_accel", "residency_levels_accel",
-           "ro_live_counts_accel", "stack_distances_segments_accel"]
+__all__ = ["cache_sim_op", "cache_sim_levels_op", "cache_sim_segments_op",
+           "live_count_op", "stack_distances_accel",
+           "residency_levels_accel", "ro_live_counts_accel",
+           "stack_distances_segments_accel"]
 
 
 def _on_tpu() -> bool:
@@ -45,6 +49,17 @@ def cache_sim_levels_op(prev, nxt, occ, cap1, captot, *,
         return cache_sim_levels_scan(prev, nxt, occ, cap1, captot,
                                      interpret=not _on_tpu())
     return cache_sim_levels_ref(prev, nxt, occ, cap1, captot)
+
+
+@partial(jax.jit, static_argnames=("seg_width", "use_kernel"))
+def cache_sim_segments_op(prev, nxt, occ, *, seg_width: int,
+                          use_kernel: bool | None = None):
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return cache_sim_segments_scan(prev, nxt, occ, seg_width=seg_width,
+                                       interpret=not _on_tpu())
+    return cache_sim_segments_ref(prev, nxt, occ, seg_width)
 
 
 @partial(jax.jit, static_argnames=("use_kernel",))
@@ -96,18 +111,66 @@ def stack_distances_accel(prev: np.ndarray, nxt: np.ndarray,
 
 
 def stack_distances_segments_accel(prev: np.ndarray, nxt: np.ndarray,
-                                   use_kernel: bool | None = None
-                                   ) -> np.ndarray:
+                                   bounds: np.ndarray | None = None,
+                                   use_kernel: bool | None = None,
+                                   layout=None) -> np.ndarray:
     """SD counting for a multi-tenant *tape* (segment-severed links).
 
     The accelerator path of the fused monitor (``repro.core.monitor``):
     links are severed at tenant block boundaries and ``nxt`` is clamped to
     the owning block's end, so a hot access's counting window
     ``(prev[i], i)`` never crosses a segment and the cross-segment
-    dominance contributions cancel — one kernel launch covers every
-    tenant's window at once, exactly like the batch replay engine's tape.
+    dominance contributions cancel.
+
+    With ``bounds`` (the per-tenant segment offsets) the tape is re-laid
+    out through ``batch_sim.padded_segment_layout`` — each segment padded
+    to the next power of two and self-aligned, padding rows cold
+    (``prev = -1``) and non-occupying (``occ = 0``) — and counted with
+    **one launch per distinct padded width**, each launch restricted to
+    the segment-aligned (i, j) grid blocks (``cache_sim_segments_scan`` /
+    the ``cache_sim_segments_ref`` dense oracle).  Widths are powers of
+    two, so jit retraces stay bounded.  Without ``bounds`` one
+    unrestricted launch covers the whole tape, exactly like the batch
+    replay engine's tape.
     """
-    return stack_distances_accel(prev, nxt, use_kernel=use_kernel)
+    if bounds is None or len(bounds) <= 2:
+        return stack_distances_accel(prev, nxt, use_kernel=use_kernel)
+    from repro.core.batch_sim import padded_segment_layout
+    n = prev.shape[0]
+    out = np.full(n, -1, dtype=np.int64)
+    src, tpos, base_src, base_pad, widths, total, _ = \
+        layout if layout is not None else padded_segment_layout(bounds)
+    if tpos.size == 0:
+        return out
+    if src is None:                              # layout kept tape order
+        src = np.arange(n, dtype=tpos.dtype)
+    # padded tape with sentinel links: pads never occupy and stay cold
+    shift = (tpos - src).astype(np.int64)
+    gprev = np.full(total, -1, dtype=np.int64)
+    gprev[tpos] = np.where(prev[src] >= 0, shift + prev[src], -1)
+    gnxt = np.arange(total, dtype=np.int64)
+    gnxt[tpos] = base_pad.astype(np.int64) + (nxt[src] - base_src)
+    gocc = np.zeros(total, dtype=np.int32)
+    gocc[tpos] = 1
+    # widths descend, so each distinct width is one contiguous, aligned
+    # chunk of the padded tape -> one restricted-grid launch per width
+    csw = np.concatenate([[0], np.cumsum(widths)]).astype(np.int64)
+    heads = np.flatnonzero(
+        np.concatenate([[True], widths[1:] != widths[:-1]]))
+    counts = np.empty(total, dtype=np.int64)
+    for h0, h1 in zip(heads, np.append(heads[1:], widths.size)):
+        lo, hi = int(csw[h0]), int(csw[int(h1)])
+        w = int(widths[h0])
+        gp = gprev[lo:hi]
+        c = cache_sim_segments_op(
+            jnp.asarray(np.where(gp >= 0, gp - lo, -1), jnp.int32),
+            jnp.asarray(gnxt[lo:hi] - lo, jnp.int32),
+            jnp.asarray(gocc[lo:hi]),
+            seg_width=w, use_kernel=use_kernel)
+        counts[lo:hi] = np.asarray(c).astype(np.int64)
+    hot = prev[src] >= 0
+    out[src[hot]] = counts[tpos[hot]]
+    return out
 
 
 def residency_levels_accel(prev: np.ndarray, nxt: np.ndarray,

@@ -4,8 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["cache_sim_ref", "cache_sim_levels_ref", "live_counts_delta",
-           "live_counts_ref"]
+__all__ = ["cache_sim_ref", "cache_sim_levels_ref", "cache_sim_segments_ref",
+           "live_counts_delta", "live_counts_ref"]
 
 
 def cache_sim_ref(prev: jax.Array, nxt: jax.Array,
@@ -21,6 +21,28 @@ def cache_sim_ref(prev: jax.Array, nxt: jax.Array,
     j_idx = jnp.arange(n)[None, :]
     contrib = ((j_idx > prev[:, None]) & (j_idx < i_idx)
                & (nxt[None, :] >= i_idx) & (occ[None, :] > 0))
+    return jnp.sum(contrib, axis=1).astype(jnp.int32)
+
+
+def cache_sim_segments_ref(prev: jax.Array, nxt: jax.Array, occ: jax.Array,
+                           seg_width: int) -> jax.Array:
+    """``cache_sim_ref`` on a segment-aligned padded tape (dense oracle).
+
+    The tape is laid out in ``seg_width``-aligned blocks, one padded
+    segment per block (``batch_sim.padded_segment_layout``), so no
+    counting window ``(prev[i], i)`` of a hot access ever crosses a block
+    — the ``j`` plane is masked to the query's own block and everything
+    outside it is provably zero (severed links never reach past a segment,
+    padding rows carry ``occ = 0``).  This is the jnp oracle for the
+    width-restricted Pallas grid of ``cache_sim_segments_scan``, which
+    simply never visits the masked-off (i, j) tiles.
+    """
+    n = prev.shape[0]
+    i_idx = jnp.arange(n)[:, None]
+    j_idx = jnp.arange(n)[None, :]
+    same = (j_idx // seg_width) == (i_idx // seg_width)
+    contrib = ((j_idx > prev[:, None]) & (j_idx < i_idx)
+               & (nxt[None, :] >= i_idx) & (occ[None, :] > 0) & same)
     return jnp.sum(contrib, axis=1).astype(jnp.int32)
 
 

@@ -4,10 +4,17 @@ Installs the pure-python ``hypothesis`` fallback (tests/_hypothesis_fallback)
 when the real library is not importable, so the property-test modules can be
 collected and run in hermetic environments.  With ``pip install -e .[test]``
 the genuine hypothesis package takes precedence.
+
+Also exposes the differential oracle harness (``tests/oracle.py``) as
+fixtures, so non-hypothesis tests can consume the shared engine-equality
+core without imports.  The nightly CI job scales every suite's example
+count through ``HYP_EXAMPLES_SCALE`` (see ``oracle.examples``).
 """
 import importlib.util
 import pathlib
 import sys
+
+import pytest
 
 
 def _install_hypothesis_fallback() -> None:
@@ -25,3 +32,17 @@ def _install_hypothesis_fallback() -> None:
 
 
 _install_hypothesis_fallback()
+
+
+@pytest.fixture
+def engine_diff():
+    """Factory for the differential oracle harness (tests/oracle.py)."""
+    from oracle import EngineDiff
+    return EngineDiff
+
+
+@pytest.fixture
+def oracle_mod():
+    """The oracle module itself (strategies, comparators, helpers)."""
+    import oracle
+    return oracle

@@ -1,0 +1,156 @@
+"""The differential oracle harness — one engine-equality test core.
+
+Every engine-equality suite used to carry its own copy of the same
+scaffolding: a trace strategy, a list→Trace builder, a result-field
+comparator and byte-level LRU-state assertions.  This module is the single
+shared implementation; ``test_batch_sim.py``, ``test_two_level.py`` and
+``test_ro_levels.py`` (and the conftest ``engine_diff`` fixture) all
+consume it.
+
+The core object is :class:`EngineDiff`: it owns one interpreter-side and
+one batch-side cache pair per tenant, replays every window through
+``simulator.simulate`` (the per-access oracle) *and* ``simulate_many``
+(the vectorized engine), and asserts after each window that
+
+  * every counted field agrees exactly (reads/hits/writes/cache writes —
+    i.e. endurance — and flush charges, per level),
+  * total latency agrees to float tolerance,
+  * the final LRU states are byte-identical per level (content, order,
+    dirty flags).
+
+``examples(n)`` scales hypothesis ``max_examples`` by the
+``HYP_EXAMPLES_SCALE`` env var so the nightly CI job can run the same
+suites at 10x depth without touching the tests (tier-1 keeps the fast
+profile).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Trace, WritePolicy, simulate, simulate_many
+from repro.core.simulator import LRUCache
+
+try:  # real hypothesis or the conftest fallback shim — either works
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover
+    st = None
+
+__all__ = [
+    "RESULT_FIELDS",
+    "EngineDiff",
+    "assert_results_equal",
+    "assert_states_equal",
+    "examples",
+    "mk_trace",
+    "trace_strategy",
+]
+
+# every counted SimResult field, both levels: hits, writes, endurance
+RESULT_FIELDS = ("reads", "read_hits", "read_hits_l2", "writes",
+                 "write_hits", "write_hits_l2", "cache_writes",
+                 "cache_writes_l2")
+
+POLICIES = (WritePolicy.WB, WritePolicy.WT, WritePolicy.RO)
+
+
+def examples(n: int) -> int:
+    """Scale a suite's ``max_examples`` by ``HYP_EXAMPLES_SCALE`` (the
+    nightly CI profile sets it to 10; tier-1 leaves it unset)."""
+    return max(1, int(n * float(os.environ.get("HYP_EXAMPLES_SCALE", "1"))))
+
+
+def trace_strategy(max_n: int = 60, max_addr: int = 10):
+    """The shared randomized-trace strategy: a list of (addr, is_read)."""
+    return st.lists(st.tuples(st.integers(0, max_addr), st.booleans()),
+                    min_size=0, max_size=max_n)
+
+
+def mk_trace(trace_list) -> Trace:
+    addrs = np.array([a for a, _ in trace_list], dtype=np.int64)
+    reads = np.array([r for _, r in trace_list], dtype=bool)
+    return Trace(addrs, reads)
+
+
+def assert_results_equal(r_ref, r_got, fields=RESULT_FIELDS) -> None:
+    """Exact equality on every counted field; latency to float tolerance."""
+    for f in fields:
+        assert getattr(r_ref, f) == getattr(r_got, f), \
+            (f, getattr(r_ref, f), getattr(r_got, f))
+    assert r_got.total_latency == pytest.approx(r_ref.total_latency,
+                                                rel=1e-9, abs=1e-9)
+
+
+def assert_states_equal(c_ref, c_got) -> None:
+    """Byte-identical LRU state: content, order and dirty flags."""
+    if c_ref is None and c_got is None:
+        return
+    assert list(c_ref._od.items()) == list(c_got._od.items())
+
+
+class EngineDiff:
+    """Replays windows through interpreter and batch engine, asserting
+    equality of results and cache states after every window.
+
+    caps1/policies (and optionally caps2/policies2) are per-tenant; pass
+    ``caps2=None`` for a single-level hierarchy.  ``run_window`` accepts a
+    per-window ``policies`` override (e.g. a WB warm-up window before RO
+    pressure) and returns the batch-engine results so tests can assert
+    extras (fallback flags, exact counter values, ...).
+    """
+
+    def __init__(self, caps1, policies, caps2=None, policies2=None, *,
+                 flush: float = 0.0, t_fast: float = 1.0,
+                 t_slow: float = 20.0, t_fast2: float | None = None):
+        self.n = len(caps1)
+        self.policies = list(policies)
+        self.two_level = caps2 is not None
+        self.policies2 = list(policies2 if policies2 is not None
+                              else [WritePolicy.WB] * self.n)
+        self.flush = flush
+        self.t_fast, self.t_slow, self.t_fast2 = t_fast, t_slow, t_fast2
+        self.ref1 = [LRUCache(int(c)) for c in caps1]
+        self.got1 = [LRUCache(int(c)) for c in caps1]
+        if self.two_level:
+            self.ref2 = [LRUCache(int(c)) for c in caps2]
+            self.got2 = [LRUCache(int(c)) for c in caps2]
+        else:
+            self.ref2 = self.got2 = None
+        self.windows = 0
+
+    def run_window(self, traces, policies=None):
+        pols = list(policies) if policies is not None else self.policies
+        kw2 = {}
+        if self.t_fast2 is not None:
+            kw2["t_fast2"] = self.t_fast2
+        r_ref = [
+            simulate(traces[k], self.ref1[k].capacity, pols[k],
+                     self.t_fast, self.t_slow, flush_cost=self.flush,
+                     cache=self.ref1[k],
+                     capacity2=(self.ref2[k].capacity if self.two_level
+                                else 0),
+                     policy2=self.policies2[k],
+                     cache2=(self.ref2[k] if self.two_level else None),
+                     **kw2)
+            for k in range(self.n)]
+        r_got = simulate_many(
+            traces, policies=pols, t_fast=self.t_fast, t_slow=self.t_slow,
+            flush_cost=self.flush, caches=self.got1,
+            policies2=self.policies2 if self.two_level else None,
+            caches2=self.got2, **kw2)
+        self.windows += 1
+        for k in range(self.n):
+            assert_results_equal(r_ref[k], r_got[k])
+            assert_states_equal(self.ref1[k], self.got1[k])
+            if self.two_level:
+                assert_states_equal(self.ref2[k], self.got2[k])
+        return r_got
+
+    def run_windows(self, all_windows, policies=None):
+        """Replay a warm multi-window chain; returns the last results."""
+        out = None
+        for traces in all_windows:
+            out = self.run_window(traces, policies=policies)
+        return out

@@ -4,43 +4,27 @@ Property tests (hypothesis) assert exact agreement of hits, write_hits,
 cache_writes, latency and final LRU state over random traces × capacities ×
 all three WritePolicy values, cold and across warm multi-window chains —
 plus the paper invariants (URD ⊆ TRD; Fig. 5 sizing) on the fast
-reuse-distance engine that rides on the same counting pass.
+reuse-distance engine that rides on the same counting pass.  All engine
+comparisons run through the shared differential oracle harness
+(``tests/oracle.py``).
 """
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
+from oracle import (EngineDiff, assert_results_equal, examples, mk_trace,
+                    trace_strategy)
 from repro.core import (Trace, WritePolicy, make_manager, reuse_distances,
-                        reuse_distances_fast, simulate, simulate_batch,
-                        simulate_many, stack_distances, urd_cache_blocks)
+                        reuse_distances_fast, simulate_batch, simulate_many,
+                        stack_distances, urd_cache_blocks)
 from repro.core.batch_sim import count_prev_ge
 from repro.core.reuse_distance import max_rd, reuse_distances_vectorized
 from repro.core.simulator import LRUCache
-from repro.data.traces import msr_trace
 
 POLICIES = [WritePolicy.WB, WritePolicy.WT, WritePolicy.RO]
 
 
-def trace_strategy(max_n=60, max_addr=10):
-    return st.lists(st.tuples(st.integers(0, max_addr), st.booleans()),
-                    min_size=0, max_size=max_n)
-
-
-def _mk(trace_list):
-    addrs = np.array([a for a, _ in trace_list], dtype=np.int64)
-    reads = np.array([r for _, r in trace_list], dtype=bool)
-    return Trace(addrs, reads)
-
-
-def assert_same(r1, r2):
-    for f in ("reads", "read_hits", "writes", "write_hits", "cache_writes"):
-        assert getattr(r1, f) == getattr(r2, f), f
-    assert r2.total_latency == pytest.approx(r1.total_latency, rel=1e-9,
-                                             abs=1e-9)
-
-
 # ------------------------------------------------------------- primitives
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=examples(100), deadline=None)
 @given(trace_strategy(max_n=120, max_addr=25))
 def test_count_prev_ge_matches_brute_force(trace_list):
     y = np.array([a for a, _ in trace_list], dtype=np.int64)
@@ -49,10 +33,10 @@ def test_count_prev_ge_matches_brute_force(trace_list):
     assert np.array_equal(count_prev_ge(y), brute)
 
 
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=examples(100), deadline=None)
 @given(trace_strategy())
 def test_stack_distances_match_brute_force(trace_list):
-    t = _mk(trace_list)
+    t = mk_trace(trace_list)
     sd = stack_distances(t, backend="host")
     addrs = t.addrs
     for i in range(len(t)):
@@ -65,19 +49,14 @@ def test_stack_distances_match_brute_force(trace_list):
 
 
 # ------------------------------------------------ engine ≡ oracle (cold)
-@settings(max_examples=150, deadline=None)
+@settings(max_examples=examples(150), deadline=None)
 @given(trace_strategy(), st.integers(0, 8), st.sampled_from(POLICIES),
        st.sampled_from([0.0, 10.0]))
 def test_batch_equals_simulate_cold(trace_list, cap, policy, flush):
-    t = _mk(trace_list)
-    c1, c2 = LRUCache(cap), LRUCache(cap)
-    r1 = simulate(t, cap, policy, flush_cost=flush, cache=c1)
-    r2 = simulate_batch(t, cap, policy, flush_cost=flush, cache=c2)
-    assert_same(r1, r2)
-    assert list(c1._od.items()) == list(c2._od.items())
+    EngineDiff([cap], [policy], flush=flush).run_window([mk_trace(trace_list)])
 
 
-@settings(max_examples=60, deadline=None)
+@settings(max_examples=examples(60), deadline=None)
 @given(st.lists(st.tuples(trace_strategy(max_n=40), st.integers(0, 7),
                           st.sampled_from(POLICIES)),
                 min_size=1, max_size=4),
@@ -85,20 +64,10 @@ def test_batch_equals_simulate_cold(trace_list, cap, policy, flush):
 def test_batch_warm_multi_window_chain(windows_spec, flush):
     """Warm cross-window state: caches seeded by earlier windows, replayed
     by both engines, must stay byte-identical (content, order, dirty)."""
-    n_tenants = len(windows_spec)
-    caps = [cap for _, cap, _ in windows_spec]
-    c1s = [LRUCache(c) for c in caps]
-    c2s = [LRUCache(c) for c in caps]
-    for w in range(3):
-        traces = [_mk(tl) for tl, _, _ in windows_spec]
-        pols = [p for _, _, p in windows_spec]
-        r1s = [simulate(tr, c.capacity, p, flush_cost=flush, cache=c)
-               for tr, p, c in zip(traces, pols, c1s)]
-        r2s = simulate_many(traces, policies=pols, flush_cost=flush,
-                            caches=c2s)
-        for t in range(n_tenants):
-            assert_same(r1s[t], r2s[t])
-            assert list(c1s[t]._od.items()) == list(c2s[t]._od.items())
+    diff = EngineDiff([cap for _, cap, _ in windows_spec],
+                      [p for _, _, p in windows_spec], flush=flush)
+    diff.run_windows([[mk_trace(tl) for tl, _, _ in windows_spec]
+                      for _ in range(3)])
 
 
 def test_ro_stack_property_counterexample():
@@ -110,40 +79,33 @@ def test_ro_stack_property_counterexample():
     addrs = np.array([0, 1, 2, 1, 2, 0], dtype=np.int64)
     reads = np.array([True, True, True, False, False, True])
     t = Trace(addrs, reads)
-    for eng in (simulate, simulate_batch):
-        r = eng(t, 2, WritePolicy.RO)
-        assert r.read_hits == 0, eng
+    rs = EngineDiff([2], [WritePolicy.RO]).run_window([t])
+    assert rs[0].read_hits == 0
 
 
-@settings(max_examples=80, deadline=None)
+@settings(max_examples=examples(80), deadline=None)
 @given(trace_strategy(max_n=80, max_addr=6), st.integers(1, 4))
 def test_ro_token_replay_under_pressure(trace_list, cap):
     """Small capacity + few addresses forces the eviction-token path."""
-    t = _mk(trace_list)
-    c1, c2 = LRUCache(cap), LRUCache(cap)
-    r1 = simulate(t, cap, WritePolicy.RO, flush_cost=10.0, cache=c1)
-    r2 = simulate_batch(t, cap, WritePolicy.RO, flush_cost=10.0, cache=c2)
-    assert_same(r1, r2)
-    assert list(c1._od.items()) == list(c2._od.items())
+    EngineDiff([cap], [WritePolicy.RO],
+               flush=10.0).run_window([mk_trace(trace_list)])
 
 
-def test_edge_cases_empty_and_zero_capacity():
+def test_edge_cases_empty_and_zero_capacity(engine_diff):
     empty = Trace(np.zeros(0, np.int64), np.zeros(0, bool))
     for pol in POLICIES:
         r = simulate_batch(empty, 4, pol)
         assert r.n == 0 and r.capacity == 4
         t = Trace(np.array([1, 2, 1], np.int64),
                   np.array([True, False, True]))
-        r0 = simulate_batch(t, 0, pol)
-        r0_ref = simulate(t, 0, pol)
-        assert_same(r0_ref, r0)
+        engine_diff([0], [pol]).run_window([t])
 
 
 # ---------------------------------------------- fast RD engine invariants
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=examples(100), deadline=None)
 @given(trace_strategy())
 def test_fast_rd_matches_fenwick_and_vectorized(trace_list):
-    t = _mk(trace_list)
+    t = mk_trace(trace_list)
     for kind in ("trd", "urd"):
         fen = reuse_distances(t, kind).distances
         fast = reuse_distances_fast(t, kind).distances
@@ -152,12 +114,12 @@ def test_fast_rd_matches_fenwick_and_vectorized(trace_list):
         assert np.array_equal(fen, vec), kind
 
 
-@settings(max_examples=100, deadline=None)
+@settings(max_examples=examples(100), deadline=None)
 @given(trace_strategy())
 def test_fast_rd_paper_invariants(trace_list):
     """Paper Eq. 1 (URD samples ⊆ TRD samples) and Fig. 5 sizing
     (urd_cache_blocks == max URD + 1) on the fast engine."""
-    t = _mk(trace_list)
+    t = mk_trace(trace_list)
     trd = reuse_distances_fast(t, "trd")
     urd = reuse_distances_fast(t, "urd")
     mask = urd.distances >= 0
@@ -184,6 +146,7 @@ def test_manager_batch_equals_lru_engine():
     """Whole Monitor→Analyzer→Actuator runs must be identical under both
     engines: per-tenant stats, latencies, decisions, policies and the
     exact final LRU states."""
+    from repro.data.traces import msr_trace
     names = ["wdev_0", "hm_1", "prn_1", "web_0", "prxy_0"]
     for scheme in ("eci", "centaur"):
         mgrs = {}
@@ -198,7 +161,7 @@ def test_manager_batch_equals_lru_engine():
             mgrs[engine] = mgr
         mb, ml = mgrs["batch"], mgrs["lru"]
         for tb, tl in zip(mb.tenants, ml.tenants):
-            assert_same(tl.result, tb.result)
+            assert_results_equal(tl.result, tb.result)
             assert tb.policy is tl.policy
             assert tb.cache.capacity == tl.cache.capacity
             assert list(tb.cache._od.items()) == list(tl.cache._od.items())
@@ -208,6 +171,7 @@ def test_manager_batch_equals_lru_engine():
 
 
 def test_manager_batch_handles_retired_tenants():
+    from repro.data.traces import msr_trace
     mgr = make_manager("eci", 500, ["a", "b"], c_min=8, initial_blocks=16,
                        engine="batch")
     tr = msr_trace("wdev_0", 300, seed=0)
@@ -217,3 +181,14 @@ def test_manager_batch_handles_retired_tenants():
     assert mgr.tenants[1].cache.capacity == 0
     mgr.run_window([tr, None])
     assert mgr.tenants[0].result.n == 900
+
+
+def test_simulate_many_matches_simulate_batch():
+    """simulate_batch is the 1-tenant view of simulate_many (same path)."""
+    rng = np.random.default_rng(9)
+    t = Trace(rng.integers(0, 12, 200).astype(np.int64),
+              rng.random(200) < 0.5)
+    for pol in POLICIES:
+        r1 = simulate_batch(t, 5, pol, flush_cost=10.0)
+        r2 = simulate_many([t], [5], [pol], flush_cost=10.0)[0]
+        assert_results_equal(r1, r2)

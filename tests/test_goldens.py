@@ -1,0 +1,154 @@
+"""Golden regression tests: small-seed fig10/12/14/16 outputs, frozen.
+
+The full benchmark suite verifies the paper's figures bit-identically, but
+only when someone runs it.  This suite freezes *small-seed* versions of
+the four figure pipelines (allocation feasibility, request mixes + policy
+assignment, performance(-per-cost), endurance) as a checked-in golden file
+so any change to the decision loop — monitor, curves, partitioner, policy
+assignment, replay engines — that shifts a single byte of figure output
+fails ``pytest -x -q``, not just the nightly/full benchmark run.
+
+Everything here is integer counts, policy strings, or float64 sums of
+small products — deterministic on a fixed platform, and JSON round-trips
+float64 exactly — so the comparison is strict equality.
+
+Regenerate (after an *intentional* change) with:
+
+    PYTHONPATH=src python tests/test_goldens.py --regen
+"""
+import json
+import pathlib
+
+import numpy as np
+
+from repro.core import make_manager, request_type_mix, write_ratio
+from repro.core.write_policy import assign_write_policy
+from repro.data.traces import msr_trace
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "goldens" / "figs_small.json"
+NAMES = ["wdev_0", "hm_1", "prn_1", "web_0", "prxy_0", "ts_0"]
+SIM = dict(t_fast=1.0, t_slow=20.0, flush_cost=10.0)
+
+
+def _run_scheme(scheme, capacity, windows=2, n=400, **kw):
+    mgr = make_manager(scheme, capacity, NAMES, c_min=10,
+                       initial_blocks=20, engine="batch", **SIM, **kw)
+    for w in range(windows):
+        mgr.run_window([msr_trace(nm, n, seed=1000 * w + i)
+                        for i, nm in enumerate(NAMES)])
+    return mgr
+
+
+def _fig10():
+    """Allocation under limited capacity: totals + infeasibility."""
+    out = {}
+    for scheme in ("eci", "centaur"):
+        mgr = _run_scheme(scheme, 900)
+        out[scheme] = {
+            "infeasible_windows": sum(not d.feasible for d in mgr.history),
+            "allocs": [int(d.sizes.sum()) for d in mgr.history],
+            "final_sizes": [int(s) for s in mgr.history[-1].sizes],
+        }
+    return out
+
+
+def _fig12():
+    """Request-type mixes, per-window policies, wThreshold sweep."""
+    mixes, policies = {}, {}
+    for nm in NAMES:
+        t = msr_trace(nm, 600, seed=12)
+        mixes[nm] = {k: float(v) for k, v in request_type_mix(t).items()}
+        policies[nm] = [
+            assign_write_policy(msr_trace(nm, 300, seed=100 + w), 0.5).value
+            for w in range(3)]
+    sweep = {str(thr): sum(assign_write_policy(
+        msr_trace(nm, 300, seed=7), thr).value == "ro" for nm in NAMES)
+        for thr in (0.2, 0.5, 0.8)}
+    wr = {nm: float(write_ratio(msr_trace(nm, 600, seed=12)))
+          for nm in NAMES}
+    return {"mixes": mixes, "policies": policies, "sweep": sweep,
+            "write_ratios": wr}
+
+
+def _fig14():
+    """Performance / perf-per-cost, ECI vs Centaur, limited capacity."""
+    out = {}
+    for scheme in ("eci", "centaur"):
+        mgr = _run_scheme(scheme, 800)
+        s = mgr.summary()
+        out[scheme] = {
+            "performance": float(s["performance"]),
+            "perf_per_cost": float(s["perf_per_cost"]),
+            "mean_latency": float(s["mean_latency"]),
+            "tenant_latencies": [float(t.result.total_latency)
+                                 for t in mgr.tenants],
+        }
+    return out
+
+
+def _fig16():
+    """Endurance: cache writes per tenant and totals."""
+    out = {}
+    for scheme in ("eci", "centaur"):
+        mgr = _run_scheme(scheme, 900)
+        out[scheme] = {
+            "cache_writes": [int(t.result.cache_writes)
+                             for t in mgr.tenants],
+            "total": int(mgr.summary()["cache_writes"]),
+            "policies": [t.policy.value for t in mgr.tenants],
+        }
+    return out
+
+
+def compute_goldens():
+    return {"fig10": _fig10(), "fig12": _fig12(), "fig14": _fig14(),
+            "fig16": _fig16()}
+
+
+def _diff(path, want, got, out):
+    if isinstance(want, dict) and isinstance(got, dict):
+        for k in set(want) | set(got):
+            _diff(f"{path}.{k}", want.get(k), got.get(k), out)
+    elif isinstance(want, list) and isinstance(got, list):
+        if len(want) != len(got):
+            out.append(f"{path}: length {len(want)} != {len(got)}")
+        else:
+            for i, (a, b) in enumerate(zip(want, got)):
+                _diff(f"{path}[{i}]", a, b, out)
+    elif want != got:
+        out.append(f"{path}: golden {want!r} != current {got!r}")
+
+
+def test_fig_outputs_match_goldens():
+    assert GOLDEN_PATH.exists(), \
+        "golden file missing — run: python tests/test_goldens.py --regen"
+    want = json.loads(GOLDEN_PATH.read_text())
+    got = json.loads(json.dumps(compute_goldens()))  # normalize types
+    mismatches: list[str] = []
+    _diff("goldens", want, got, mismatches)
+    assert not mismatches, "\n".join(
+        ["figure outputs drifted from goldens (bit-identity broken);",
+         "if intentional: PYTHONPATH=src python tests/test_goldens.py "
+         "--regen"] + mismatches[:30])
+
+
+def test_goldens_sanity():
+    """The frozen numbers still tell the paper's story at small seed:
+    ECI is feasible at least as often, and commits fewer cache writes."""
+    g = json.loads(GOLDEN_PATH.read_text())
+    assert g["fig10"]["eci"]["infeasible_windows"] <= \
+        g["fig10"]["centaur"]["infeasible_windows"]
+    assert g["fig16"]["eci"]["total"] < g["fig16"]["centaur"]["total"]
+    assert np.isfinite(g["fig14"]["eci"]["performance"])
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--regen", action="store_true",
+                    help="rewrite the golden file from the current code")
+    if ap.parse_args().regen:
+        GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN_PATH.write_text(json.dumps(compute_goldens(), indent=1,
+                                          sort_keys=True) + "\n")
+        print(f"wrote {GOLDEN_PATH}")

@@ -1,0 +1,252 @@
+"""Segment-aligned padding is exact: padded fused monitoring ≡ per-tenant.
+
+The fused monitor's counting pass lays all tenants' windows out on a
+power-of-two padded, self-aligned tape and stops the merge recursion at
+each segment's padded width (``batch_sim.padded_segment_layout`` /
+``count_prev_ge_padded``).  These property tests pin the cancellation
+proof to adversarial shapes: empty tenant windows, single-access segments,
+all-write traces, window lengths and tenant counts straddling power-of-two
+boundaries, and the SHARDS-sampled sub-trace path — plus the width-bounded
+counting primitives against their unpadded oracles and the ``cache_sim``
+segments ops/kernel entry against the host pass.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from oracle import examples
+from repro.core import (Trace, analyze_windows, build_hit_ratio_function,
+                        reuse_distances_fast, sampled_reuse_distances,
+                        shards_salt, urd_cache_blocks)
+from repro.core.batch_sim import (_PAD_MIN, _stack_distances_host,
+                                  count_prev_ge, count_prev_ge_padded,
+                                  padded_segment_layout)
+from repro.core.monitor import _segment_links
+from repro.core.write_policy import write_ratio
+
+# window shapes that straddle power-of-two boundaries, plus degenerates
+ADVERSARIAL_LENS = [0, 1, 2, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127, 129]
+
+
+def windows_strategy(max_tenants=9, max_n=120, max_addr=12):
+    """Random multi-tenant windows: (addr, is_read) lists, empties common."""
+    return st.lists(
+        st.lists(st.tuples(st.integers(0, max_addr), st.booleans()),
+                 min_size=0, max_size=max_n),
+        min_size=1, max_size=max_tenants)
+
+
+def mk_traces(windows):
+    out = []
+    for i, w in enumerate(windows):
+        addrs = np.array([a for a, _ in w], dtype=np.int64)
+        reads = np.array([r for _, r in w], dtype=bool)
+        out.append(Trace(addrs, reads, f"t{i}"))
+    return out
+
+
+def links_for(traces):
+    lens = np.array([len(t) for t in traces], dtype=np.int64)
+    bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    addrs = (np.concatenate([t.addrs for t in traces]) if int(lens.sum())
+             else np.zeros(0, np.int64))
+    tid = np.repeat(np.arange(len(traces), dtype=np.int64), lens)
+    prev, nxt = _segment_links(addrs, tid, bounds)
+    return prev, nxt, bounds
+
+
+def assert_monitor_matches_per_tenant(traces, kind="urd"):
+    mon = analyze_windows(traces, kind)
+    for k, tr in enumerate(traces):
+        rd = reuse_distances_fast(tr, kind)
+        h = build_hit_ratio_function(rd)
+        assert np.array_equal(h.edges, mon.curves[k].edges), k
+        assert np.array_equal(h.heights, mon.curves[k].heights), k
+        assert h.n_accesses == mon.curves[k].n_accesses, k
+        assert urd_cache_blocks(rd) == mon.urd_sizes[k], k
+        assert write_ratio(tr) == mon.write_ratios[k], k
+
+
+# --------------------------------------------------- fused == per-tenant
+@settings(max_examples=examples(40), deadline=None)
+@given(windows_strategy(), st.sampled_from(["urd", "trd"]))
+def test_padded_fused_monitor_bit_identical(windows, kind):
+    assert_monitor_matches_per_tenant(mk_traces(windows), kind)
+
+
+@pytest.mark.parametrize("n_tenants", [1, 2, 3, 15, 16, 17, 31, 33])
+def test_tenant_counts_straddling_pow2(n_tenants):
+    """Tenant counts around power-of-two boundaries, window lengths from
+    the adversarial list (empty, single-access, straddling widths)."""
+    rng = np.random.default_rng(n_tenants)
+    traces = []
+    for i in range(n_tenants):
+        n = ADVERSARIAL_LENS[i % len(ADVERSARIAL_LENS)]
+        traces.append(Trace(rng.integers(0, 7, n).astype(np.int64),
+                            rng.random(n) < 0.6, f"t{i}"))
+    assert_monitor_matches_per_tenant(traces)
+
+
+def test_adversarial_degenerates():
+    """Empty windows, single accesses, all-writes, and one long tenant
+    behind many empties — the padding layout's worst shapes."""
+    rng = np.random.default_rng(0)
+    traces = [
+        Trace(np.zeros(0, np.int64), np.zeros(0, bool), "empty"),
+        Trace(np.array([5], np.int64), np.array([True]), "single-read"),
+        Trace(np.array([5], np.int64), np.array([False]), "single-write"),
+        Trace(np.arange(40, dtype=np.int64) % 4, np.zeros(40, bool),
+              "all-writes"),
+        Trace(np.zeros(0, np.int64), np.zeros(0, bool), "empty2"),
+        Trace(rng.integers(0, 50, 513).astype(np.int64),
+              rng.random(513) < 0.5, "long"),
+    ]
+    for kind in ("urd", "trd"):
+        assert_monitor_matches_per_tenant(traces, kind)
+
+
+# ------------------------------------------------- SHARDS sub-trace path
+@settings(max_examples=examples(25), deadline=None)
+@given(windows_strategy(max_tenants=5, max_n=200, max_addr=60),
+       st.sampled_from([0.3, 0.6]), st.integers(0, 7))
+def test_padded_fused_monitor_sampled_path(windows, rate, seed):
+    """The sampled path pads the *kept sub-tape*: still bit-identical to
+    the per-tenant sampled engine, including zero-kept tenants."""
+    traces = mk_traces(windows)
+    mon = analyze_windows(traces, "urd", sample_rate=rate, window_seed=seed)
+    for k, tr in enumerate(traces):
+        rd = sampled_reuse_distances(tr, "urd", rate=rate,
+                                     salt=shards_salt(seed, k))
+        h = build_hit_ratio_function(rd)
+        assert np.array_equal(h.edges, mon.curves[k].edges), k
+        assert np.array_equal(h.heights, mon.curves[k].heights), k
+        assert mon.urd_sizes[k] == urd_cache_blocks(rd), k
+
+
+# ------------------------------------------- width-bounded primitives
+@settings(max_examples=examples(60), deadline=None)
+@given(st.lists(st.integers(0, 150), min_size=1, max_size=8),
+       st.integers(0, 9))
+def test_padded_counting_pass_matches_per_segment(lens, seed):
+    """The padded tape's SD pass ≡ each segment counted alone."""
+    rng = np.random.default_rng(seed)
+    bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    traces = [Trace(rng.integers(0, 9, n).astype(np.int64),
+                    np.ones(n, bool)) for n in lens]
+    prev, nxt, bounds = links_for(traces)
+    got = _stack_distances_host(prev, nxt, bounds=bounds)
+    for k, (s, e) in enumerate(zip(bounds[:-1], bounds[1:])):
+        s, e = int(s), int(e)
+        if e <= s:
+            continue
+        alone = reuse_distances_fast(traces[k], "trd").distances
+        assert np.array_equal(got[s:e], alone), k
+
+
+@settings(max_examples=examples(60), deadline=None)
+@given(st.lists(st.lists(st.integers(0, 40), min_size=0, max_size=90),
+                min_size=1, max_size=6))
+def test_count_prev_ge_padded_matches_unpadded(segments):
+    """Width-bounded merge counts ≡ count_prev_ge per segment (pads 0)."""
+    lens = np.array([len(s) for s in segments], dtype=np.int64)
+    bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    src, tpos, base_src, base_pad, widths, total, starts = \
+        padded_segment_layout(bounds)
+    if tpos.size == 0:
+        return
+    vals = np.concatenate([np.asarray(s, np.int64) for s in segments]) + 1
+    gy = np.zeros(total, dtype=np.int64)
+    gy[tpos] = vals if src is None else vals[src]
+    cnt = count_prev_ge_padded(gy, widths)
+    # compare per segment against the unpadded primitive
+    w_off = 0
+    order = np.argsort(-np.maximum(
+        1 << np.ceil(np.log2(np.maximum(lens[lens > 0], 1))).astype(int),
+        _PAD_MIN), kind="stable")
+    seg_ids = np.flatnonzero(lens > 0)[order]
+    for row, k in enumerate(seg_ids):
+        w = int(widths[row])
+        seg = np.asarray(segments[k], np.int64) + 1
+        want = count_prev_ge(seg)
+        assert np.array_equal(cnt[w_off:w_off + seg.size], want), k
+        w_off += w
+
+
+def test_layout_alignment_invariants():
+    """Every padded segment starts at a multiple of its own width, widths
+    descend, and the real entries land inside their own row."""
+    rng = np.random.default_rng(1)
+    for _ in range(50):
+        lens = rng.integers(0, 300, rng.integers(1, 10))
+        bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+        src, tpos, base_src, base_pad, widths, total, starts = \
+            padded_segment_layout(bounds)
+        if tpos.size == 0:
+            continue
+        assert np.all(widths[:-1] >= widths[1:])        # descending
+        assert np.all((1 << np.round(np.log2(widths)).astype(int))
+                      == widths)                        # powers of two
+        row_base = np.concatenate([[0], np.cumsum(widths)[:-1]])
+        assert np.all(row_base % widths == 0)           # self-aligned
+        assert int(widths.sum()) == total
+        # every real entry sits inside its own padded row
+        assert np.all(tpos.astype(np.int64) - base_pad < np.repeat(
+            widths, np.diff(np.flatnonzero(np.concatenate(
+                [[True], base_pad[1:] != base_pad[:-1], [True]])))))
+
+
+# --------------------------------------------- cache_sim segments entry
+@settings(max_examples=examples(20), deadline=None)
+@given(st.lists(st.integers(0, 120), min_size=1, max_size=6),
+       st.integers(0, 5))
+def test_segments_accel_ref_matches_host(lens, seed):
+    from repro.kernels.cache_sim.ops import stack_distances_segments_accel
+    rng = np.random.default_rng(seed)
+    traces = [Trace(rng.integers(0, 11, n).astype(np.int64),
+                    np.ones(n, bool)) for n in lens]
+    prev, nxt, bounds = links_for(traces)
+    host = _stack_distances_host(prev, nxt, bounds=bounds)
+    acc = stack_distances_segments_accel(prev, nxt, bounds=bounds,
+                                         use_kernel=False)
+    assert np.array_equal(host, acc)
+
+
+def test_segments_dense_ref_masks_cross_block():
+    """The dense segments oracle counts nothing across aligned blocks even
+    when fed unsevered links (the mask, not the links, is load-bearing)."""
+    import jax.numpy as jnp
+    from repro.kernels.cache_sim.ref import (cache_sim_ref,
+                                             cache_sim_segments_ref)
+    rng = np.random.default_rng(4)
+    n, w = 128, 32
+    prev = rng.integers(-1, n, n)
+    nxt = rng.integers(0, n + 1, n)
+    occ = np.ones(n, np.int32)
+    seg = np.asarray(cache_sim_segments_ref(
+        jnp.asarray(prev, jnp.int32), jnp.asarray(nxt, jnp.int32),
+        jnp.asarray(occ), w))
+    # reference: dense count with j restricted to i's block by hand
+    blk = np.arange(n) // w
+    for i in range(n):
+        js = np.flatnonzero((np.arange(n) > prev[i]) & (np.arange(n) < i)
+                            & (nxt >= i) & (blk == blk[i]))
+        assert seg[i] == js.size, i
+    # and the unrestricted oracle differs whenever a window spans blocks
+    full = np.asarray(cache_sim_ref(jnp.asarray(prev, jnp.int32),
+                                    jnp.asarray(nxt, jnp.int32),
+                                    jnp.asarray(occ)))
+    assert np.any(full != seg)
+
+
+@pytest.mark.slow
+def test_segments_kernel_interpret_matches_ref():
+    from repro.kernels.cache_sim.ops import stack_distances_segments_accel
+    rng = np.random.default_rng(8)
+    lens = [300, 70, 64, 5, 0, 129]
+    traces = [Trace(rng.integers(0, 17, n).astype(np.int64),
+                    np.ones(n, bool)) for n in lens]
+    prev, nxt, bounds = links_for(traces)
+    host = _stack_distances_host(prev, nxt, bounds=bounds)
+    acc = stack_distances_segments_accel(prev, nxt, bounds=bounds,
+                                         use_kernel=True)
+    assert np.array_equal(host, acc)

@@ -9,97 +9,65 @@ must replay vectorized — bit-identical per-level hits, write hits, cache
 writes (endurance), demotions, flush charges, latency and final per-level
 LRU states, cold and across warm multi-window chains, with clean and
 dirty-accepting L2 policies.  ``SimResult.fallback`` must stay 0
-everywhere except genuinely degenerate windows.
+everywhere except genuinely degenerate windows.  Engine comparisons run
+through the shared differential oracle harness (``tests/oracle.py``).
 """
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from oracle import (EngineDiff, assert_results_equal, examples, mk_trace,
+                    trace_strategy)
 from repro.core import (Trace, WritePolicy, make_manager,
-                        ro_token_replay_levels_device, simulate,
-                        simulate_batch, simulate_many)
+                        ro_token_replay_levels_device, simulate_batch)
 from repro.core.batch_sim import _ro_token_replay_levels
 from repro.core.simulator import LRUCache
 from repro.core.trace import prev_next_occurrence
 
-FIELDS = ("reads", "read_hits", "read_hits_l2", "writes", "write_hits",
-          "write_hits_l2", "cache_writes", "cache_writes_l2")
 
-
-def trace_strategy(max_n=60, max_addr=5):
-    return st.lists(st.tuples(st.integers(0, max_addr), st.booleans()),
-                    min_size=0, max_size=max_n)
-
-
-def _mk(trace_list):
-    addrs = np.array([a for a, _ in trace_list], dtype=np.int64)
-    reads = np.array([r for _, r in trace_list], dtype=bool)
-    return Trace(addrs, reads)
-
-
-def assert_same(r1, r2):
-    for f in FIELDS:
-        assert getattr(r1, f) == getattr(r2, f), \
-            (f, getattr(r1, f), getattr(r2, f))
-    assert r2.total_latency == pytest.approx(r1.total_latency, rel=1e-9,
-                                             abs=1e-9)
+def ro_strategy(max_n=60, max_addr=5):
+    return trace_strategy(max_n=max_n, max_addr=max_addr)
 
 
 # --------------------------------------------- cold, both L2 dirty policies
-@settings(max_examples=200, deadline=None)
-@given(trace_strategy(), st.integers(1, 3), st.integers(1, 3),
+@settings(max_examples=examples(200), deadline=None)
+@given(ro_strategy(), st.integers(1, 3), st.integers(1, 3),
        st.sampled_from([WritePolicy.WB, WritePolicy.RO]),
        st.sampled_from([0.0, 10.0]))
 def test_ro_pressure_cold_matches_interpreter(trace_list, c1, c2, p2, flush):
-    t = _mk(trace_list)
-    a1, a2 = LRUCache(c1), LRUCache(c2)
-    b1, b2 = LRUCache(c1), LRUCache(c2)
-    r1 = simulate(t, c1, WritePolicy.RO, flush_cost=flush, cache=a1,
-                  capacity2=c2, policy2=p2, cache2=a2)
-    r2 = simulate_batch(t, c1, WritePolicy.RO, flush_cost=flush, cache=b1,
-                        capacity2=c2, policy2=p2, cache2=b2)
-    assert_same(r1, r2)
+    t = mk_trace(trace_list)
+    r = EngineDiff([c1], [WritePolicy.RO], [c2], [p2],
+                   flush=flush).run_window([t])[0]
     # pressure stays on the token path; only the degenerate empty
     # two-level window takes the interpreter
-    assert r2.fallback == (1 if len(t) == 0 else 0)
-    assert list(a1._od.items()) == list(b1._od.items())
-    assert list(a2._od.items()) == list(b2._od.items())
+    assert r.fallback == (1 if len(t) == 0 else 0)
 
 
 # ------------------------------------ warm chains under sustained pressure
-@settings(max_examples=60, deadline=None)
-@given(st.lists(trace_strategy(max_n=50, max_addr=5), min_size=2,
-                max_size=4),
+@settings(max_examples=examples(60), deadline=None)
+@given(st.lists(ro_strategy(max_n=50, max_addr=5), min_size=2, max_size=4),
        st.integers(1, 3), st.integers(1, 3),
        st.sampled_from([WritePolicy.WB, WritePolicy.RO]))
 def test_ro_pressure_warm_chain_matches_interpreter(windows, c1, c2, p2):
     """Warm per-level state (content, order, dirty flags) must survive the
     token replay byte-identically across windows; the first window runs WB
     to seed dirty blocks into the hierarchy before RO takes over."""
-    a1, a2 = LRUCache(c1), LRUCache(c2)
-    b1, b2 = LRUCache(c1), LRUCache(c2)
+    diff = EngineDiff([c1], [WritePolicy.RO], [c2], [p2], flush=10.0)
     for w, tl in enumerate(windows):
-        t = _mk(tl)
         pol = WritePolicy.WB if w == 0 else WritePolicy.RO
-        r1 = simulate(t, c1, pol, flush_cost=10.0, cache=a1,
-                      capacity2=c2, policy2=p2, cache2=a2)
-        r2 = simulate_many([t], policies=[pol], flush_cost=10.0,
-                           caches=[b1], policies2=[p2], caches2=[b2])[0]
-        assert_same(r1, r2)
-        assert list(a1._od.items()) == list(b1._od.items()), w
-        assert list(a2._od.items()) == list(b2._od.items()), w
+        diff.run_window([mk_trace(tl)], policies=[pol])
 
 
 # --------------------------------------------- device port ≡ host oracle
-@settings(max_examples=60, deadline=None)
-@given(trace_strategy(max_n=80, max_addr=5), st.integers(0, 3),
+@settings(max_examples=examples(60), deadline=None)
+@given(ro_strategy(max_n=80, max_addr=5), st.integers(0, 3),
        st.integers(0, 3), st.integers(1, 4), st.integers(1, 4),
        st.booleans())
 def test_ro_levels_device_matches_host(trace_list, n_l2, n_l1, c1, c2,
                                        clean2):
     """The fori_loop port must reproduce death/dirty/level/flush/demotion
     outputs exactly, including warm-L2 and warm-L1 pseudo-read prefixes."""
-    t = _mk(trace_list)
+    t = mk_trace(trace_list)
     n_l2, n_l1 = min(n_l2, c2), min(n_l1, c1)
     warm = np.arange(100, 100 + n_l2 + n_l1, dtype=np.int64)
     addrs = np.concatenate([warm, t.addrs])
@@ -121,7 +89,7 @@ def test_ro_levels_device_matches_host(trace_list, n_l2, n_l1, c1, c2,
 
 
 # ------------------------------------------- per-level flush accounting
-def test_clean_l2_flushes_at_demotion_under_pressure():
+def test_clean_l2_flushes_at_demotion_under_pressure(engine_diff):
     """A dirty warm-L1 block demoted under RO pressure must flush at the
     demotion boundary (clean L2) or at its final L2 eviction (WB L2) —
     one flush either way, charged on the vectorized path."""
@@ -129,31 +97,29 @@ def test_clean_l2_flushes_at_demotion_under_pressure():
     # the 1-block L2 entirely
     t = Trace(np.array([0, 1, 2], np.int64), np.ones(3, bool))
     for p2 in (WritePolicy.RO, WritePolicy.WB):
-        for eng in (simulate, simulate_batch):
-            c1, c2 = LRUCache(1), LRUCache(1)
-            c1.set_state_arrays(np.array([9], np.int64), np.array([True]))
-            r = eng(t, 1, WritePolicy.RO, flush_cost=5.0, cache=c1,
-                    capacity2=1, policy2=p2, cache2=c2)
-            # clean2 (p2=RO): flush when 9 demotes; WB L2: flush when 9 is
-            # finally evicted from L2 — one 5.0 charge either way
-            assert r.total_latency == pytest.approx(3 * 20.0 + 5.0), \
-                (p2, eng)
-            assert r.cache_writes_l2 == 3       # 9, 0, 1 each demoted
-            assert r.fallback == 0
-            assert list(c1._od) == [2] and list(c2._od) == [1], (p2, eng)
+        diff = engine_diff([1], [WritePolicy.RO], [1], [p2], flush=5.0)
+        for caches in (diff.ref1, diff.got1):
+            caches[0].set_state_arrays(np.array([9], np.int64),
+                                       np.array([True]))
+        r = diff.run_window([t])[0]
+        # clean2 (p2=RO): flush when 9 demotes; WB L2: flush when 9 is
+        # finally evicted from L2 — one 5.0 charge either way
+        assert r.total_latency == pytest.approx(3 * 20.0 + 5.0), p2
+        assert r.cache_writes_l2 == 3       # 9, 0, 1 each demoted
+        assert r.fallback == 0
+        assert list(diff.got1[0]._od) == [2], p2
+        assert list(diff.got2[0]._od) == [1], p2
 
 
-def test_ro_pressure_endurance_counters():
+def test_ro_pressure_endurance_counters(engine_diff):
     """cache_writes = installs + promotions; cache_writes_l2 = demotions —
     checked against the interpreter on a promotion-heavy pressure mix."""
     rng = np.random.default_rng(3)
     t = Trace(rng.integers(0, 5, 300).astype(np.int64),
               rng.random(300) < 0.7)
-    r_i = simulate(t, 2, WritePolicy.RO, capacity2=2)
-    r_b = simulate_batch(t, 2, WritePolicy.RO, capacity2=2)
+    r_b = engine_diff([2], [WritePolicy.RO], [2],
+                      [WritePolicy.WB]).run_window([t])[0]
     assert r_b.fallback == 0
-    assert (r_b.cache_writes, r_b.cache_writes_l2) == \
-        (r_i.cache_writes, r_i.cache_writes_l2)
     assert r_b.cache_writes == (r_b.reads - r_b.read_hits
                                 - r_b.read_hits_l2) + r_b.read_hits_l2
     assert r_b.cache_writes_l2 > 0              # pressure ⇒ demotions
@@ -180,7 +146,7 @@ def test_manager_pressure_mix_no_fallback():
     assert all(t.policy is WritePolicy.RO for t in mb.tenants)
     assert mb.summary()["ro_fallback_windows"] == 0
     for tb, tl in zip(mb.tenants, ml.tenants):
-        assert_same(tl.result, tb.result)
+        assert_results_equal(tl.result, tb.result)
         assert list(tb.cache._od.items()) == list(tl.cache._od.items())
         assert list(tb.cache2._od.items()) == list(tl.cache2._od.items())
 

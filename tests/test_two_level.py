@@ -6,71 +6,44 @@ writes, latency and the final per-level LRU states over random traces ×
 chains; plus the degenerate ``C2 == 0`` identity with the single-level
 scheme, the device port of the RO eviction-token loop, the kernel's
 both-level residency masks, the two-stage Eq.-2 solver, and the manager's
-end-to-end engine equivalence.
+end-to-end engine equivalence.  Engine comparisons run through the shared
+differential oracle harness (``tests/oracle.py``).
 """
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from oracle import (EngineDiff, RESULT_FIELDS, assert_results_equal,
+                    assert_states_equal, examples, mk_trace, trace_strategy)
 from repro.core import (ECICacheManager, Trace, WritePolicy,
                         assign_write_policy_levels, build_hit_ratio_function,
                         greedy_allocate, make_manager, reuse_distances,
                         ro_token_replay_device, simulate, simulate_batch,
-                        simulate_many, two_level_solve)
+                        two_level_solve)
 from repro.core.batch_sim import _ro_token_replay
 from repro.core.simulator import LRUCache, rebalance_levels
 from repro.data.traces import msr_trace
 
 POLICIES = [WritePolicy.WB, WritePolicy.WT, WritePolicy.RO]
-FIELDS = ("reads", "read_hits", "read_hits_l2", "writes", "write_hits",
-          "write_hits_l2", "cache_writes", "cache_writes_l2")
 
 
-def trace_strategy(max_n=50, max_addr=8):
-    return st.lists(st.tuples(st.integers(0, max_addr), st.booleans()),
-                    min_size=0, max_size=max_n)
-
-
-def _mk(trace_list):
-    addrs = np.array([a for a, _ in trace_list], dtype=np.int64)
-    reads = np.array([r for _, r in trace_list], dtype=bool)
-    return Trace(addrs, reads)
-
-
-def assert_same(r1, r2):
-    for f in FIELDS:
-        assert getattr(r1, f) == getattr(r2, f), \
-            (f, getattr(r1, f), getattr(r2, f))
-    assert r2.total_latency == pytest.approx(r1.total_latency, rel=1e-9,
-                                             abs=1e-9)
-
-
-def assert_states(c1a, c1b, c2a=None, c2b=None):
-    assert list(c1a._od.items()) == list(c1b._od.items())
-    if c2a is not None:
-        assert list(c2a._od.items()) == list(c2b._od.items())
+def two_level_strategy(max_n=50, max_addr=8):
+    return trace_strategy(max_n=max_n, max_addr=max_addr)
 
 
 # ------------------------------------------------ engine ≡ oracle (cold)
-@settings(max_examples=200, deadline=None)
-@given(trace_strategy(), st.integers(0, 5), st.integers(0, 5),
+@settings(max_examples=examples(200), deadline=None)
+@given(two_level_strategy(), st.integers(0, 5), st.integers(0, 5),
        st.sampled_from(POLICIES), st.sampled_from(POLICIES),
        st.sampled_from([0.0, 10.0]))
 def test_two_level_batch_equals_simulate_cold(trace_list, c1, c2, p1, p2,
                                               flush):
-    t = _mk(trace_list)
-    a1, a2 = LRUCache(c1), LRUCache(c2)
-    b1, b2 = LRUCache(c1), LRUCache(c2)
-    r1 = simulate(t, c1, p1, flush_cost=flush, cache=a1,
-                  capacity2=c2, policy2=p2, cache2=a2)
-    r2 = simulate_batch(t, c1, p1, flush_cost=flush, cache=b1,
-                        capacity2=c2, policy2=p2, cache2=b2)
-    assert_same(r1, r2)
-    assert_states(a1, b1, a2, b2)
+    EngineDiff([c1], [p1], [c2], [p2],
+               flush=flush).run_window([mk_trace(trace_list)])
 
 
-@settings(max_examples=50, deadline=None)
-@given(st.lists(st.tuples(trace_strategy(max_n=30), st.integers(0, 5),
+@settings(max_examples=examples(50), deadline=None)
+@given(st.lists(st.tuples(two_level_strategy(max_n=30), st.integers(0, 5),
                           st.integers(0, 5), st.sampled_from(POLICIES),
                           st.sampled_from(POLICIES)),
                 min_size=1, max_size=3),
@@ -78,58 +51,40 @@ def test_two_level_batch_equals_simulate_cold(trace_list, c1, c2, p1, p2,
 def test_two_level_warm_multi_window_chain(windows_spec, flush):
     """Warm cross-window per-level state must stay byte-identical (content,
     order, dirty flags) between the interpreter and the batch engine."""
-    T = len(windows_spec)
-    a1 = [LRUCache(c1) for _, c1, _, _, _ in windows_spec]
-    a2 = [LRUCache(c2) for _, _, c2, _, _ in windows_spec]
-    b1 = [LRUCache(c1) for _, c1, _, _, _ in windows_spec]
-    b2 = [LRUCache(c2) for _, _, c2, _, _ in windows_spec]
-    p1s = [p for _, _, _, p, _ in windows_spec]
-    p2s = [p for _, _, _, _, p in windows_spec]
-    for w in range(3):
-        traces = [_mk(tl) for tl, _, _, _, _ in windows_spec]
-        r1s = [simulate(traces[k], a1[k].capacity, p1s[k], flush_cost=flush,
-                        cache=a1[k], capacity2=a2[k].capacity,
-                        policy2=p2s[k], cache2=a2[k]) for k in range(T)]
-        r2s = simulate_many(traces, policies=p1s, flush_cost=flush,
-                            caches=b1, policies2=p2s, caches2=b2)
-        for k in range(T):
-            assert_same(r1s[k], r2s[k])
-            assert_states(a1[k], b1[k], a2[k], b2[k])
+    diff = EngineDiff([c1 for _, c1, _, _, _ in windows_spec],
+                      [p for _, _, _, p, _ in windows_spec],
+                      [c2 for _, _, c2, _, _ in windows_spec],
+                      [p for _, _, _, _, p in windows_spec], flush=flush)
+    diff.run_windows([[mk_trace(tl) for tl, _, _, _, _ in windows_spec]
+                      for _ in range(3)])
 
 
-@settings(max_examples=100, deadline=None)
-@given(trace_strategy(max_n=60, max_addr=5), st.integers(1, 3),
+@settings(max_examples=examples(100), deadline=None)
+@given(two_level_strategy(max_n=60, max_addr=5), st.integers(1, 3),
        st.integers(1, 3))
 def test_two_level_ro_under_pressure(trace_list, c1, c2):
-    """Small caps + few addresses force the two-level RO fallback path."""
-    t = _mk(trace_list)
-    a1, a2 = LRUCache(c1), LRUCache(c2)
-    b1, b2 = LRUCache(c1), LRUCache(c2)
-    r1 = simulate(t, c1, WritePolicy.RO, flush_cost=10.0, cache=a1,
-                  capacity2=c2, cache2=a2)
-    r2 = simulate_batch(t, c1, WritePolicy.RO, flush_cost=10.0, cache=b1,
-                        capacity2=c2, cache2=b2)
-    assert_same(r1, r2)
-    assert_states(a1, b1, a2, b2)
+    """Small caps + few addresses force the two-level RO pressure path."""
+    EngineDiff([c1], [WritePolicy.RO], [c2], [WritePolicy.WB],
+               flush=10.0).run_window([mk_trace(trace_list)])
 
 
-@settings(max_examples=100, deadline=None)
-@given(trace_strategy(max_n=40), st.integers(0, 6),
+@settings(max_examples=examples(100), deadline=None)
+@given(two_level_strategy(max_n=40), st.integers(0, 6),
        st.sampled_from(POLICIES), st.sampled_from([0.0, 10.0]))
 def test_capacity2_zero_is_single_level(trace_list, cap, policy, flush):
     """C2 == 0 must reproduce each single-level engine bit-identically
     (old single-level API vs the same engine with the two-level knobs)."""
-    t = _mk(trace_list)
+    t = mk_trace(trace_list)
     for eng in (simulate, simulate_batch):
         ca, cb = LRUCache(cap), LRUCache(cap)
         r_old = eng(t, cap, policy, flush_cost=flush, cache=ca)
         r_new = eng(t, cap, policy, flush_cost=flush, cache=cb,
                     capacity2=0, policy2=WritePolicy.RO)
-        for f in FIELDS:
+        for f in RESULT_FIELDS:
             assert getattr(r_old, f) == getattr(r_new, f), f
         assert r_new.read_hits_l2 == 0 and r_new.cache_writes_l2 == 0
         assert r_old.total_latency == r_new.total_latency  # bit-identical
-        assert_states(ca, cb)
+        assert_states_equal(ca, cb)
 
 
 def test_rebalance_levels_invariant():
@@ -144,36 +99,35 @@ def test_rebalance_levels_invariant():
     assert list(c2._od.items()) == [(1, False)]
 
 
-def test_promotion_and_demotion_counting():
+def test_promotion_and_demotion_counting(engine_diff):
     """r(a) r(b) r(a) at C1=1, C2=1: second r(a) is an L2 hit (a was
     demoted by r(b)); the promotion writes L1 and demotes b to L2."""
     t = Trace(np.array([0, 1, 0], np.int64), np.ones(3, bool))
-    for eng in (simulate, simulate_batch):
-        r = eng(t, 1, WritePolicy.WB, capacity2=1, t_fast2=4.0)
-        assert (r.read_hits, r.read_hits_l2) == (0, 1), eng
-        assert r.cache_writes == 3          # 2 installs + 1 promotion
-        assert r.cache_writes_l2 == 2       # a demoted, then b demoted
-        assert r.total_latency == pytest.approx(2 * 20.0 + 4.0)
+    r = engine_diff([1], [WritePolicy.WB], [1], [WritePolicy.WB],
+                    t_fast2=4.0).run_window([t])[0]
+    assert (r.read_hits, r.read_hits_l2) == (0, 1)
+    assert r.cache_writes == 3          # 2 installs + 1 promotion
+    assert r.cache_writes_l2 == 2       # a demoted, then b demoted
+    assert r.total_latency == pytest.approx(2 * 20.0 + 4.0)
 
 
-def test_clean_l2_flushes_at_demotion():
+def test_clean_l2_flushes_at_demotion(engine_diff):
     """policy2 != WB: the dirty victim flushes when demoted, not at union
     eviction; L2 content stays clean."""
     t = Trace(np.array([0, 1], np.int64), np.array([False, True]))
-    for eng in (simulate, simulate_batch):
-        c1, c2 = LRUCache(1), LRUCache(1)
-        r = eng(t, 1, WritePolicy.WB, flush_cost=5.0, cache=c1,
-                capacity2=1, policy2=WritePolicy.RO, cache2=c2)
-        # w(0) installs dirty; r(1) demotes 0 -> flush charged at demote
-        assert r.total_latency == pytest.approx(1.0 + 20.0 + 5.0), eng
-        assert list(c2._od.items()) == [(0, False)], eng
+    diff = engine_diff([1], [WritePolicy.WB], [1], [WritePolicy.RO],
+                       flush=5.0)
+    r = diff.run_window([t])[0]
+    # w(0) installs dirty; r(1) demotes 0 -> flush charged at demote
+    assert r.total_latency == pytest.approx(1.0 + 20.0 + 5.0)
+    assert list(diff.got2[0]._od.items()) == [(0, False)]
 
 
 # ------------------------------------------------ RO token loop, on device
-@settings(max_examples=60, deadline=None)
-@given(trace_strategy(max_n=80, max_addr=5), st.integers(1, 4))
+@settings(max_examples=examples(60), deadline=None)
+@given(two_level_strategy(max_n=80, max_addr=5), st.integers(1, 4))
 def test_ro_token_replay_device_matches_host(trace_list, cap):
-    t = _mk(trace_list)
+    t = mk_trace(trace_list)
     if len(t) == 0:
         return
     from repro.core.trace import prev_next_occurrence
@@ -294,11 +248,12 @@ def test_manager_two_level_batch_equals_lru():
         mgrs[engine] = mgr
     mb, ml = mgrs["batch"], mgrs["lru"]
     for tb, tl in zip(mb.tenants, ml.tenants):
-        assert_same(tl.result, tb.result)
+        assert_results_equal(tl.result, tb.result)
         assert tb.policy is tl.policy and tb.policy2 is tl.policy2
         assert tb.cache.capacity == tl.cache.capacity
         assert tb.cache2.capacity == tl.cache2.capacity
-        assert_states(tb.cache, tl.cache, tb.cache2, tl.cache2)
+        assert_states_equal(tb.cache, tl.cache)
+        assert_states_equal(tb.cache2, tl.cache2)
     for db, dl in zip(mb.history, ml.history):
         assert np.array_equal(db.sizes, dl.sizes)
         assert np.array_equal(db.sizes2, dl.sizes2)
