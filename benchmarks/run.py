@@ -16,8 +16,8 @@ from benchmarks import (bench_appendixA_feasible, bench_etica_two_level,
                         bench_fig04_write_policy, bench_fig10_allocation,
                         bench_fig12_policy_assignment,
                         bench_fig14_perf_per_cost, bench_fig16_endurance,
-                        bench_monitor_scale, bench_serving_cache,
-                        bench_table3_urd_overhead)
+                        bench_monitor_scale, bench_scenarios,
+                        bench_serving_cache, bench_table3_urd_overhead)
 
 BENCHES = [
     ("fig04_write_policy", bench_fig04_write_policy),
@@ -30,6 +30,7 @@ BENCHES = [
     ("etica_two_level", bench_etica_two_level),
     ("serving_cache", bench_serving_cache),
     ("monitor_scale", bench_monitor_scale),
+    ("scenarios", bench_scenarios),
 ]
 
 

@@ -199,6 +199,22 @@ class TieredKVCache:
             return True
         return key in self.host_lru.get(tenant, ())
 
+    def add_tenant(self, name: str = "") -> int:
+        """Tenant churn on the serving path: a workload joins mid-run.
+
+        Extends every per-tenant structure and registers the tenant with
+        the manager (whose next analyze records the ``"join"`` event and
+        sizes the newcomer).  Existing tenants' quotas, host tiers and
+        monitor state are untouched.
+        """
+        i = self.manager.add_tenant(name)
+        self.quotas[i] = None
+        self.policies[i] = self.manager.tenants[i].policy
+        self.stats.append(TierStats())
+        self.host_lru[i] = OrderedDict()
+        self.host_quotas[i] = None
+        return i
+
     def finish_tenant(self, tenant: int) -> None:
         hook = self.pool.on_evict
         self.pool.on_evict = None      # retiring pages are not demotions
@@ -227,7 +243,10 @@ class TieredKVCache:
             mask = ten == t
             if mask.any():
                 self.manager.record(t, ad[mask].copy(), rd[mask].copy())
-        decision = self.manager.analyze()
+        joins = self.manager._drain_joined(self.manager.windows_run)
+        if joins:
+            self.manager._record_events(joins)
+        decision = self.manager.analyze(trigger=tuple(joins))
         for i, tstate in enumerate(self.manager.tenants):
             if not tstate.active:
                 continue

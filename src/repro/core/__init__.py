@@ -8,7 +8,11 @@ from repro.core.batch_sim import (reuse_distances_fast,
                                   ro_token_replay_levels_device,
                                   simulate_batch, simulate_many,
                                   stack_distances)
-from repro.core.manager import AnalyzerDecision, ECICacheManager, TenantState
+from repro.core.characterize import (PhaseDetector, PhaseEvent,
+                                     WindowFeatures, characterize_trace,
+                                     characterize_windows)
+from repro.core.manager import (AnalyzerDecision, ECICacheManager,
+                                ReconfigEvent, TenantState)
 from repro.core.monitor import MonitorResult, analyze_windows
 from repro.core.mrc import (BatchedHitRatioFunctions, HitRatioFunction,
                             build_hit_ratio_function,
@@ -32,11 +36,13 @@ __all__ = [
     "AccessClass", "AnalyzerDecision", "BatchedHitRatioFunctions",
     "ECICacheManager", "GlobalLRUManager",
     "HitRatioFunction", "LRUCache", "MonitorResult", "PartitionResult",
-    "RDResult", "SimResult",
-    "TenantState", "Trace", "WritePolicy", "aggregate_latency",
+    "PhaseDetector", "PhaseEvent", "RDResult", "ReconfigEvent", "SimResult",
+    "TenantState", "Trace", "WindowFeatures", "WritePolicy",
+    "aggregate_latency",
     "analyze_windows", "assign_write_policy", "assign_write_policy_levels",
     "auto_sample_rate", "build_hit_ratio_function",
-    "build_hit_ratio_functions", "classify_accesses",
+    "build_hit_ratio_functions", "characterize_trace",
+    "characterize_windows", "classify_accesses",
     "greedy_allocate", "make_manager", "max_rd", "pgd_solve",
     "rebalance_levels", "request_type_mix", "reuse_distances",
     "reuse_distances_fast", "reuse_distances_vectorized",

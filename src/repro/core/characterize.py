@@ -1,0 +1,490 @@
+"""ReCA-style online workload characterization (PAPERS.md, arxiv 1805.06747).
+
+ECI-Cache's premise is *online* adaptation: URD and the Alg.-3 write ratio
+are recomputed per Δt so the partition tracks the workload.  This module
+supplies the half the fixed-Δt loop never exercised — detecting *when* a
+tenant's behavior changes so ``ECICacheManager`` can reconfigure on phase
+boundaries instead of only on the clock.  It has two parts: a vectorized
+per-(tenant, window) feature pass and a hysteresis phase detector.
+
+Feature definitions (one ``WindowFeatures`` row per tenant per window)
+-----------------------------------------------------------------------
+
+  * ``stride_hist[:, 4]`` — normalized histogram of successive address
+    deltas ``addrs[i] - addrs[i-1]`` *within* a tenant's window, binned as
+    ``[+1, 0, local, other]`` where ``local`` means ``2 <= |s| <= 64``
+    (a semi-sequential run or small seek) and ``other`` is everything
+    else (random).  ``seq_fraction`` is the ``+1`` bin — the fraction of
+    perfectly sequential successors, the ReCA sequential/random axis.
+  * ``read_fraction`` — reads / accesses (the read/write-mix axis).
+  * ``write_ratio`` — Alg. 3's ``(WAW + WAR) / n``: the fraction of
+    accesses that are *write re-touches* (previous occurrence of the same
+    address exists inside the window and the current access is a write).
+    Identical to ``repro.core.write_policy.write_ratio`` per window, and
+    to the fused monitor's per-tenant write ratio.
+  * ``working_set`` — distinct addresses touched in the window (the
+    number of cold accesses, i.e. positions with no previous occurrence).
+  * ``jaccard_drift`` — ``1 - |A ∩ B| / |A ∪ B]`` between this window's
+    distinct-address set and the previous window's (0 when no previous
+    set is known): working-set *drift*, the axis that catches a tenant
+    migrating to new data even when its mix/locality statistics are
+    unchanged.
+  * ``reuse_intensity`` — re-touch fraction ``1 - distinct / n``: how much
+    of the window is re-reference at all (the quantity URD feeds on).
+
+Fused computation — no second pass over the trace
+-------------------------------------------------
+
+The spatial features (working set, drift, reuse intensity, write ratio)
+need per-position *previous-occurrence* information — exactly what the
+fused monitor / batch replay engine already compute.  ``characterize_windows``
+therefore accepts the per-tenant window reuse-distance arrays
+(``dists[k]``, ``-1`` at cold positions) that ``simulate_many(...,
+return_window_rd=True)`` returns: with those, the whole feature pass is a
+handful of ``bincount``/``diff`` segment reductions over the window tape —
+O(n) with **no sort and no counting pass**.  Only tenants *without* a
+precomputed distance array fall back to one occurrence-link construction
+(``monitor._segment_links`` on the same power-of-two padded, self-aligned
+segment layout the counting pass uses).  The stream features (stride
+histogram, read fraction) are plain O(n) reductions on the raw access
+stream.
+
+Sampled-path estimator (SHARDS + Horvitz–Thompson)
+--------------------------------------------------
+
+With ``sample_rate`` set, the spatial features are estimated from the
+SHARDS-filtered sub-trace: spatial hashing keeps *every* access of a kept
+address, so re-touch classification is exact per kept address and
+
+  * ``working_set ≈ distinct_kept / rate``  (each distinct address is
+    kept with probability ``rate`` — the Horvitz–Thompson estimator, the
+    same correction the sampled monitor applies to curve heights),
+  * ``write_ratio`` / ``reuse_intensity`` are ratio estimators over the
+    kept sub-trace (numerator and denominator both restricted to kept
+    accesses — unbiased, matching the monitor's sampled write ratio),
+  * ``jaccard_drift`` compares *kept* distinct sets; because the keep
+    decision is a pure function of the address, ``kept(A) ∩ kept(B) =
+    kept(A ∩ B)`` and the kept-set Jaccard is a consistent estimator of
+    the true one — **provided the filter is identical across windows**.
+    The characterization filter therefore salts per *tenant only*
+    (``characterize_salt``), deliberately unlike the monitor's
+    per-(tenant, window) salts: a persistent spatial sample is what makes
+    drift comparable window-over-window.
+
+Stream features are always computed exactly on the raw stream: sampling
+destroys successive-address deltas (kept accesses are not adjacent in the
+original stream), and the exact computation is already sort-free O(n).
+
+Hysteresis phase detection
+--------------------------
+
+``PhaseDetector`` keeps, per tenant, an EMA baseline over the normalized
+feature vector ``[seq_fraction, read_fraction, write_ratio,
+reuse_intensity, log2(working_set + 1) / ws_scale]`` plus a baseline drift
+level.  The change score is the max of (a) the largest absolute deviation
+of the feature vector from its baseline and (b) the *excess* Jaccard
+drift over its baseline (weighted by ``drift_weight``; the steady-state
+drift of a stationary workload is learned, only drift *beyond* it
+scores).  The hysteresis rule: a tenant triggers when its score reaches
+``hi`` while armed, and stays disarmed while its score sits in the
+``[lo, hi)`` band.  On trigger the tenant *cold-restarts*: the next
+window re-initializes the baseline and the warm-up repeats, so the new
+phase becomes the reference from its first warmed window and a single
+phase change yields a single event.  Additionally, when ``w_threshold``
+is set, any
+window whose write ratio crosses the threshold relative to the baseline
+raises a ``"write_ratio"`` event even below ``hi`` — the Alg.-3 policy
+flip must not wait for the next clock tick.  The first window a tenant is
+ever seen only initializes its baseline (cold start, no event), the
+first *drift* observation likewise only initializes the drift baseline,
+and for ``warmup`` further windows the detector only updates its EMA
+without triggering: a workload's very first window is systematically
+atypical (caches and re-touch pools start empty), and the warm-up lets
+the baseline absorb that transient instead of reporting it as a phase.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.batch_sim import padded_segment_layout
+from repro.core.reuse_distance import shards_keep_mask, shards_salt
+from repro.core.trace import Trace
+
+__all__ = [
+    "STRIDE_BINS",
+    "WindowFeatures",
+    "PhaseEvent",
+    "PhaseDetector",
+    "characterize_salt",
+    "characterize_trace",
+    "characterize_windows",
+]
+
+# stride histogram bins: [+1 (sequential), 0 (repeat), 2<=|s|<=64 (local
+# seek / semi-sequential), other (random)]
+STRIDE_BINS = 4
+_LOCAL_REACH = 64
+
+# fixed seed for the characterization SHARDS filter: per-tenant salts must
+# be stable across windows so kept-set Jaccard drift is comparable (see
+# module docstring) — deliberately not the monitor's per-window salts
+_CHAR_SEED = 0x5EC4
+
+
+def characterize_salt(tenant: int) -> int:
+    """Window-stable SHARDS salt for the characterization filter."""
+    return shards_salt(_CHAR_SEED, int(tenant))
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowFeatures:
+    """Per-tenant workload features for one Δt window (see module doc).
+
+    ``address_sets[k]`` is tenant k's sorted distinct (kept) address
+    array — feed it back as ``prev_sets`` when characterizing the next
+    window so ``jaccard_drift`` is populated.  ``sample_rates`` records
+    the effective SHARDS rate per tenant (1.0 exact).
+    """
+
+    stride_hist: np.ndarray      # float64[N, STRIDE_BINS], rows sum to 1
+    seq_fraction: np.ndarray     # float64[N] == stride_hist[:, 0]
+    read_fraction: np.ndarray    # float64[N]
+    write_ratio: np.ndarray      # float64[N]  Alg. 3 (WAW+WAR)/n
+    working_set: np.ndarray      # float64[N]  (HT-corrected when sampled)
+    jaccard_drift: np.ndarray    # float64[N]  1 - Jaccard vs prev window
+    reuse_intensity: np.ndarray  # float64[N]  re-touch fraction
+    sample_rates: np.ndarray     # float64[N]
+    address_sets: list           # [N] sorted int64 distinct kept addrs
+
+
+def _stride_counts(addrs: np.ndarray) -> np.ndarray:
+    """Histogram of successive deltas for one window (int64[STRIDE_BINS])."""
+    out = np.zeros(STRIDE_BINS, dtype=np.int64)
+    if addrs.shape[0] < 2:
+        return out
+    d = np.diff(addrs)
+    a = np.abs(d)
+    out[0] = int(np.sum(d == 1))
+    out[1] = int(np.sum(d == 0))
+    out[2] = int(np.sum((a >= 2) & (a <= _LOCAL_REACH)))
+    out[3] = d.shape[0] - int(out[:3].sum())
+    return out
+
+
+def characterize_trace(trace: Trace, prev_set: np.ndarray | None = None,
+                       rate: float = 1.0, salt: int | None = None
+                       ) -> WindowFeatures:
+    """Naive single-tenant reference (dict/set loops): the test oracle.
+
+    Bit-identical to one row of ``characterize_windows`` — exact when
+    ``rate == 1.0``, and on the identically-filtered sub-trace when a
+    ``rate`` (and optionally an explicit ``salt``) is given.
+    """
+    n = len(trace)
+    hist = _stride_counts(trace.addrs).astype(np.float64)
+    hist /= max(int(hist.sum()), 1)
+    read_fraction = float(np.sum(trace.is_read)) / max(n, 1)
+
+    if rate < 1.0:
+        keep = shards_keep_mask(
+            trace.addrs, rate,
+            characterize_salt(0) if salt is None else salt)
+        addrs = trace.addrs[keep]
+        is_read = trace.is_read[keep]
+    else:
+        addrs, is_read = trace.addrs, trace.is_read
+    kept = addrs.shape[0]
+
+    seen: set[int] = set()
+    retouch_writes = 0
+    retouches = 0
+    for a, rd in zip(addrs.tolist(), is_read.tolist()):
+        if a in seen:
+            retouches += 1
+            if not rd:
+                retouch_writes += 1
+        else:
+            seen.add(a)
+    distinct = len(seen)
+    cur = np.sort(np.fromiter(seen, dtype=np.int64, count=distinct))
+    if prev_set is not None and (distinct or prev_set.size):
+        inter = np.intersect1d(cur, prev_set, assume_unique=True).size
+        union = distinct + prev_set.size - inter
+        drift = 1.0 - inter / union
+    else:
+        drift = 0.0
+    return WindowFeatures(
+        stride_hist=hist[None, :],
+        seq_fraction=np.array([hist[0]]),
+        read_fraction=np.array([read_fraction]),
+        write_ratio=np.array([retouch_writes / max(kept, 1)]),
+        working_set=np.array([distinct / max(rate, 1e-300)]),
+        jaccard_drift=np.array([drift]),
+        reuse_intensity=np.array([retouches / max(kept, 1)]),
+        sample_rates=np.array([float(rate)]),
+        address_sets=[cur])
+
+
+def _cold_mask(addrs: np.ndarray, tid: np.ndarray,
+               bounds: np.ndarray) -> np.ndarray:
+    """True at each segment's first occurrence of an address (prev < 0),
+    via one occurrence-link pass on the padded segment layout."""
+    from repro.core.monitor import _segment_links
+    layout = padded_segment_layout(bounds)
+    prev, _ = _segment_links(addrs, tid, bounds, layout)
+    return prev < 0
+
+
+def characterize_windows(traces: list[Trace],
+                         prev_sets: list[np.ndarray | None] | None = None,
+                         dists: list[np.ndarray | None] | None = None,
+                         sample_rate: float | None = None,
+                         tenant_ids: list[int] | None = None
+                         ) -> WindowFeatures:
+    """Batched per-(tenant, window) feature pass (see module docstring).
+
+    ``dists[k]`` optionally carries tenant k's window reuse-distance array
+    (``-1`` at cold positions) from ``simulate_many(...,
+    return_window_rd=True)`` or the fused monitor — those tenants need no
+    occurrence-link pass at all.  ``prev_sets[k]`` is the previous
+    window's ``address_sets[k]`` (enables ``jaccard_drift``).
+    ``sample_rate`` routes tenants *without* a precomputed distance array
+    through the SHARDS-filtered estimator; ``tenant_ids`` stabilizes their
+    filter salts under churn (defaults to positional ids).
+    """
+    n = len(traces)
+    lens = np.array([len(t) for t in traces], dtype=np.int64)
+    prev_sets = prev_sets if prev_sets is not None else [None] * n
+    dists = dists if dists is not None else [None] * n
+    ids = np.asarray(tenant_ids if tenant_ids is not None else range(n),
+                     dtype=np.int64)
+
+    # ---------------------------------------------- stream features, exact
+    # successive deltas on the raw stream; one concatenated diff with the
+    # window boundaries masked out (no sort, no counting pass)
+    hist = np.zeros((n, STRIDE_BINS), dtype=np.float64)
+    m = int(lens.sum())
+    if m:
+        addrs_all = np.concatenate([t.addrs for t in traces])
+        reads_all = np.concatenate([t.is_read for t in traces])
+        tid = np.repeat(np.arange(n, dtype=np.int64), lens)
+        d = addrs_all[1:] - addrs_all[:-1]
+        internal = tid[1:] == tid[:-1]          # sever at window boundaries
+        a = np.abs(d)
+        bin_idx = np.where(d == 1, 0,
+                           np.where(d == 0, 1,
+                                    np.where((a >= 2) & (a <= _LOCAL_REACH),
+                                             2, 3)))
+        key = tid[1:] * STRIDE_BINS + bin_idx
+        counts = np.bincount(key[internal],
+                             minlength=n * STRIDE_BINS).reshape(n,
+                                                                STRIDE_BINS)
+        hist = counts / np.maximum(counts.sum(axis=1, keepdims=True), 1)
+        read_fraction = (np.bincount(tid[reads_all], minlength=n)
+                         / np.maximum(lens, 1))
+    else:
+        read_fraction = np.zeros(n)
+    seq_fraction = hist[:, 0].copy()
+
+    # --------------------------------------------------- spatial features
+    # tenants with a precomputed distance array: hot = dist >= 0, free;
+    # the rest share one occurrence-link pass on a (possibly SHARDS-
+    # filtered) sub-tape
+    rates = np.ones(n)
+    kept = lens.astype(np.float64).copy()
+    retouch = np.zeros(n, dtype=np.int64)
+    retouch_w = np.zeros(n, dtype=np.int64)
+    distinct = np.zeros(n, dtype=np.int64)
+    sets: list[np.ndarray] = [None] * n
+    need = []
+    for k in range(n):
+        dk = dists[k]
+        if dk is None:
+            if lens[k] > 0:
+                need.append(k)
+            else:
+                sets[k] = np.zeros(0, dtype=np.int64)
+                if sample_rate is not None:
+                    rates[k] = float(sample_rate)
+            continue
+        hot = dk >= 0
+        retouch[k] = int(hot.sum())
+        retouch_w[k] = int(np.sum(hot & ~traces[k].is_read))
+        distinct[k] = int(lens[k]) - retouch[k]
+        sets[k] = np.sort(traces[k].addrs[~hot])
+
+    if need:
+        if sample_rate is not None:
+            r = float(sample_rate)
+            if not (0 < r <= 1):
+                raise ValueError("sample_rate must be in (0, 1]")
+            keeps = [shards_keep_mask(traces[k].addrs, r,
+                                      characterize_salt(int(ids[k])))
+                     for k in need]
+            for k in need:
+                rates[k] = r
+        else:
+            keeps = [np.ones(int(lens[k]), dtype=bool) for k in need]
+        sub_lens = np.array([int(kp.sum()) for kp in keeps], dtype=np.int64)
+        sub_bounds = np.concatenate([[0], np.cumsum(sub_lens)]).astype(
+            np.int64)
+        if int(sub_lens.sum()):
+            sub_addr = np.concatenate(
+                [traces[k].addrs[kp] for k, kp in zip(need, keeps)])
+            sub_read = np.concatenate(
+                [traces[k].is_read[kp] for k, kp in zip(need, keeps)])
+        else:
+            sub_addr = np.zeros(0, dtype=np.int64)
+            sub_read = np.zeros(0, dtype=bool)
+        sub_tid = np.repeat(np.arange(len(need), dtype=np.int64), sub_lens)
+        cold = _cold_mask(sub_addr, sub_tid, sub_bounds)
+        nn = len(need)
+        r_c = np.bincount(sub_tid[~cold], minlength=nn)
+        r_w = np.bincount(sub_tid[~cold & ~sub_read], minlength=nn)
+        d_c = np.bincount(sub_tid[cold], minlength=nn)
+        for j, k in enumerate(need):
+            kept[k] = float(sub_lens[j])
+            retouch[k] = int(r_c[j])
+            retouch_w[k] = int(r_w[j])
+            distinct[k] = int(d_c[j])
+            seg = sub_addr[sub_bounds[j]:sub_bounds[j + 1]]
+            sets[k] = np.sort(seg[cold[sub_bounds[j]:sub_bounds[j + 1]]])
+
+    working_set = distinct / np.maximum(rates, 1e-300)
+    write_ratio = retouch_w / np.maximum(kept, 1)
+    reuse_intensity = retouch / np.maximum(kept, 1)
+
+    drift = np.zeros(n)
+    for k in range(n):
+        ps = prev_sets[k]
+        cur = sets[k]
+        if ps is None or (cur.size == 0 and ps.size == 0):
+            continue
+        inter = np.intersect1d(cur, ps, assume_unique=True).size
+        union = cur.size + ps.size - inter
+        drift[k] = 1.0 - inter / union
+
+    return WindowFeatures(
+        stride_hist=hist, seq_fraction=seq_fraction,
+        read_fraction=read_fraction, write_ratio=write_ratio,
+        working_set=working_set, jaccard_drift=drift,
+        reuse_intensity=reuse_intensity, sample_rates=rates,
+        address_sets=sets)
+
+
+# --------------------------------------------------------- phase detection
+@dataclasses.dataclass(frozen=True)
+class PhaseEvent:
+    """One detected phase change: tenant, window, why, how large."""
+
+    window: int
+    tenant: int
+    reason: str          # "phase" | "write_ratio"
+    score: float
+
+
+class PhaseDetector:
+    """Hysteresis-thresholded per-tenant change detector (see module doc).
+
+    ``hi``/``lo`` are the trigger/re-arm thresholds on the change score,
+    ``ema`` the baseline update weight, ``ws_scale`` the log2 working-set
+    normalization (a ``2**ws_scale``-fold working-set change scores 1.0),
+    ``drift_weight`` the weight of excess Jaccard drift, ``w_threshold``
+    (optional) the Alg.-3 boundary whose crossing always raises a
+    ``"write_ratio"`` event, ``warmup`` the number of post-init windows
+    scored into the baseline before triggers arm (cold-start transient,
+    see module docstring).
+    """
+
+    def __init__(self, hi: float = 0.25, lo: float = 0.10,
+                 ema: float = 0.5, ws_scale: float = 3.0,
+                 drift_weight: float = 0.5,
+                 w_threshold: float | None = None, warmup: int = 1):
+        if not (0.0 <= lo <= hi):
+            raise ValueError(f"need 0 <= lo <= hi, got lo={lo} hi={hi}")
+        self.hi, self.lo = float(hi), float(lo)
+        self.ema = float(ema)
+        self.ws_scale = float(ws_scale)
+        self.drift_weight = float(drift_weight)
+        self.w_threshold = (None if w_threshold is None
+                            else float(w_threshold))
+        self.warmup = max(int(warmup), 0)
+        self._base: dict[int, np.ndarray] = {}
+        self._base_wr: dict[int, float] = {}
+        self._base_drift: dict[int, float | None] = {}
+        self._armed: dict[int, bool] = {}
+        self._seen: dict[int, int] = {}
+
+    def _fvec(self, feats: WindowFeatures, k: int) -> np.ndarray:
+        return np.array([
+            feats.seq_fraction[k],
+            feats.read_fraction[k],
+            feats.write_ratio[k],
+            feats.reuse_intensity[k],
+            np.log2(max(feats.working_set[k], 0.0) + 1.0) / self.ws_scale,
+        ])
+
+    def forget(self, tenant: int) -> None:
+        """Drop a retired tenant's state (a later re-join is a cold start)."""
+        self._base.pop(tenant, None)
+        self._base_wr.pop(tenant, None)
+        self._base_drift.pop(tenant, None)
+        self._armed.pop(tenant, None)
+        self._seen.pop(tenant, None)
+
+    def update(self, feats: WindowFeatures, window: int,
+               tenant_ids=None) -> list[PhaseEvent]:
+        """Score one window's features; return triggered events."""
+        n = feats.read_fraction.shape[0]
+        ids = list(tenant_ids) if tenant_ids is not None else list(range(n))
+        events: list[PhaseEvent] = []
+        for k, t in enumerate(ids):
+            t = int(t)
+            fvec = self._fvec(feats, k)
+            wr = float(feats.write_ratio[k])
+            drift = float(feats.jaccard_drift[k])
+            base = self._base.get(t)
+            if base is None:                     # cold start: baseline only
+                self._base[t] = fvec
+                self._base_wr[t] = wr
+                self._base_drift[t] = None
+                self._armed[t] = True
+                self._seen[t] = 1
+                continue
+            self._seen[t] += 1
+            if self._seen[t] <= self.warmup + 1:
+                # warm-up: the init window is systematically atypical
+                # (empty caches/pools) — *replace* the baseline with this
+                # warmed window rather than averaging the transient in
+                self._base[t] = fvec
+                self._base_wr[t] = wr
+                self._base_drift[t] = drift
+                continue
+            score = float(np.max(np.abs(fvec - base)))
+            bd = self._base_drift[t]
+            if bd is not None:
+                score = max(score, self.drift_weight * max(0.0, drift - bd))
+            crossed = (self.w_threshold is not None
+                       and (self._base_wr[t] >= self.w_threshold)
+                       != (wr >= self.w_threshold))
+            armed = self._armed[t]
+            if armed and (score >= self.hi or crossed):
+                events.append(PhaseEvent(
+                    window, t, "write_ratio" if crossed else "phase",
+                    score))
+                # full cold restart: the *next* window (the first warmed
+                # window of the new phase) becomes the reference — the
+                # transition window itself carries the phase's cold-start
+                # transient and would poison an EMA baseline
+                self.forget(t)
+                continue
+            if not armed and score < self.lo:
+                self._armed[t] = True
+            a = self.ema
+            self._base[t] = (1.0 - a) * base + a * fvec
+            self._base_wr[t] = (1.0 - a) * self._base_wr[t] + a * wr
+            self._base_drift[t] = (drift if bd is None
+                                   else (1.0 - a) * bd + a * drift)
+        return events

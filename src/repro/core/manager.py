@@ -24,6 +24,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.batch_sim import simulate_many
+from repro.core.characterize import PhaseDetector, characterize_windows
 from repro.core.monitor import analyze_windows
 from repro.core.mrc import HitRatioFunction
 from repro.core.partitioner import (PartitionResult, pgd_solve,
@@ -32,7 +33,8 @@ from repro.core.simulator import LRUCache, SimResult, simulate
 from repro.core.trace import Trace
 from repro.core.write_policy import WritePolicy
 
-__all__ = ["TenantState", "AnalyzerDecision", "ECICacheManager"]
+__all__ = ["TenantState", "AnalyzerDecision", "ReconfigEvent",
+           "ECICacheManager"]
 
 
 @dataclasses.dataclass
@@ -63,6 +65,22 @@ class TenantState:
 
 
 @dataclasses.dataclass(frozen=True)
+class ReconfigEvent:
+    """Why the Analyzer ran (event-driven mode telemetry).
+
+    reason: "phase" (detector score crossed ``hi``), "write_ratio"
+    (Alg.-3 threshold crossing), "interval" (the fixed-Δt fallback
+    clock), "join" / "retire" (tenant churn).  ``tenant`` is the manager
+    index, -1 for deployment-wide triggers.
+    """
+
+    window: int
+    tenant: int
+    reason: str
+    score: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class AnalyzerDecision:
     sizes: np.ndarray
     policies: list[WritePolicy]
@@ -72,6 +90,8 @@ class AnalyzerDecision:
     sizes2: np.ndarray | None = None
     policies2: list[WritePolicy] | None = None
     partition2: PartitionResult | None = None
+    # event-driven mode: what triggered this analyze (empty on fixed-Δt)
+    trigger: tuple[ReconfigEvent, ...] = ()
 
 
 class ECICacheManager:
@@ -117,7 +137,26 @@ class ECICacheManager:
 
     ``history_limit`` bounds the retained ``AnalyzerDecision`` list (a
     long-running serving deployment analyzes every Δt forever; unbounded
-    history is a leak).  ``None`` keeps everything.
+    history is a leak).  ``None`` keeps everything.  The same limit bounds
+    the ``events`` reconfiguration log.
+
+    ``phase_detect=True`` turns on ReCA-style event-driven
+    reconfiguration (default **off**; with it off every code path is
+    bit-identical to the fixed-Δt manager): each replayed window is
+    characterized (``repro.core.characterize``, reusing the batch
+    engine's window reuse distances so the feature pass adds no second
+    pass over the trace) and a hysteresis ``PhaseDetector`` scores every
+    tenant.  The Analyzer then runs only when (a) a tenant changes phase,
+    (b) a tenant's Alg.-3 write ratio crosses ``w_threshold`` (the policy
+    flip must not wait for the clock), (c) a tenant joins or retires, or
+    (d) ``reconfig_interval`` windows have accumulated since the last
+    analyze (the fixed-Δt fallback clock; 1 analyzes every window).
+    Windows between analyzes accumulate in the Monitor, so a triggered
+    analyze sees the full access history since the last decision.  Every
+    trigger is recorded as a ``ReconfigEvent`` in ``events`` (bounded by
+    ``history_limit``) and on the resulting decision's ``trigger`` field.
+    ``phase_hi``/``phase_lo``/``phase_ema`` parameterize the detector's
+    hysteresis thresholds and baseline EMA.
     """
 
     def __init__(self, capacity: int, tenant_names: list[str],
@@ -134,7 +173,10 @@ class ECICacheManager:
                  w_threshold2: float = 0.3,
                  history_limit: int | None = 256,
                  sample_target: int = 4096, sample_floor: int = 256,
-                 auto_sample_tenants: int = 256):
+                 auto_sample_tenants: int = 256,
+                 phase_detect: bool = False, reconfig_interval: int = 1,
+                 phase_hi: float = 0.25, phase_lo: float = 0.10,
+                 phase_ema: float = 0.5):
         if engine not in ("batch", "lru"):
             raise ValueError(f"engine must be 'batch' or 'lru', got {engine!r}")
         self.capacity = int(capacity)
@@ -162,6 +204,20 @@ class ECICacheManager:
             collections.deque(maxlen=history_limit)
         self.windows_analyzed = 0       # also salts the SHARDS hash per window
         self.tenant_windows = 0         # replayed tenant-windows (denominator)
+        # event-driven reconfiguration (ReCA-style; default off = exact
+        # pre-existing fixed-Δt behavior, analyze every window)
+        self.reconfig_interval = max(int(reconfig_interval), 1)
+        self.detector = (PhaseDetector(
+            hi=phase_hi, lo=phase_lo, ema=phase_ema,
+            w_threshold=(w_threshold if adaptive_policy else None))
+            if phase_detect else None)
+        self.events: collections.deque[ReconfigEvent] = \
+            collections.deque(maxlen=history_limit)
+        self.reconfig_events = 0        # total events ever (deque is bounded)
+        self.windows_run = 0            # run_window calls (≥ windows_analyzed)
+        self._pending_windows = 0       # replayed but not yet analyzed
+        self._prev_sets: dict[int, np.ndarray] = {}   # drift continuity
+        self._joined: list[int] = []    # tenants added since last window
         # interpreter-fallback tenant-windows: since the two-level RO
         # eviction-token replay this counts only genuinely degenerate
         # windows (empty two-level windows / warm L2 behind a dead level);
@@ -174,12 +230,32 @@ class ECICacheManager:
         t.window_addrs.append(np.asarray(addrs, np.int64))
         t.window_reads.append(np.asarray(is_read, bool))
 
+    def add_tenant(self, name: str,
+                   initial_blocks: int | None = None) -> int:
+        """Tenant churn: a workload joins mid-run.  Returns its index.
+
+        The next ``run_window`` records a ``"join"`` reconfiguration
+        event; in event-driven mode that forces an analyze so the
+        newcomer is sized from its first window.  Existing tenants'
+        SHARDS salts and detector baselines are untouched (ids are
+        positional and a join only appends).
+        """
+        init = int(initial_blocks if initial_blocks is not None
+                   else self.c_min)
+        self.tenants.append(TenantState(name, LRUCache(init)))
+        i = len(self.tenants) - 1
+        self._joined.append(i)
+        return i
+
     def retire_tenant(self, tenant: int) -> None:
         """Workload finished: release its partitions (paper §6.3)."""
         t = self.tenants[tenant]
         t.active = False
         t.cache.resize(0)
         t.cache2.resize(0)
+        self._prev_sets.pop(tenant, None)
+        if self.detector is not None:
+            self.detector.forget(tenant)
 
     # ------------------------------------------------------------ Analyzer
     def effective_sample_rate(self) -> float | str | None:
@@ -189,7 +265,8 @@ class ECICacheManager:
             return "auto"
         return self.sample_rate
 
-    def analyze(self, window_trd: dict[int, np.ndarray] | None = None
+    def analyze(self, window_trd: dict[int, np.ndarray] | None = None,
+                trigger: tuple[ReconfigEvent, ...] = ()
                 ) -> AnalyzerDecision:
         """Alg. 1 / Alg. 4: run at every Δt window boundary.
 
@@ -249,7 +326,8 @@ class ECICacheManager:
                                     sizes2=sizes2_full,
                                     policies2=[t.policy2
                                                for t in self.tenants],
-                                    partition2=part2)
+                                    partition2=part2,
+                                    trigger=tuple(trigger))
         self.history.append(decision)
         return decision
 
@@ -280,16 +358,33 @@ class ECICacheManager:
         agg.policy = t.policy.value
         agg.policy2 = t.policy2.value
 
+    def _record_events(self, events: list[ReconfigEvent]) -> None:
+        self.events.extend(events)
+        self.reconfig_events += len(events)
+
+    def _drain_joined(self, window: int) -> list[ReconfigEvent]:
+        """Pending ``add_tenant`` joins -> churn events (not yet recorded)."""
+        evs = [ReconfigEvent(window, i, "join") for i in self._joined]
+        self._joined.clear()
+        return evs
+
     def run_window(self, traces: list[Trace | None],
                    engine: str | None = None) -> None:
         """Replay one Δt window for every tenant, then analyze + actuate.
 
-        ``traces[i] is None`` marks tenant i as finished.
+        ``traces[i] is None`` marks tenant i as finished.  With
+        ``phase_detect`` on, the analyze/actuate half runs only when the
+        phase detector, a churn event, or the ``reconfig_interval`` clock
+        triggers it (see the class docstring); the replay half always
+        runs.
         """
         engine = self.engine if engine is None else engine
+        win = self.windows_run
+        events = self._drain_joined(win)
         for i, tr in enumerate(traces):
             if tr is None and self.tenants[i].active:
                 self.retire_tenant(i)
+                events.append(ReconfigEvent(win, i, "retire"))
 
         idx = [i for i, tr in enumerate(traces) if tr is not None]
         for i in idx:
@@ -323,8 +418,40 @@ class ECICacheManager:
                                t_fast2=self.t_fast2, cache2=t.cache2)
                 self._accumulate(t, res)
         self.tenant_windows += len(idx)
-        decision = self.analyze(window_trd)
-        self.actuate(decision)
+        self.windows_run += 1
+
+        if self.detector is None:
+            # fixed-Δt mode: analyze + actuate every window, exactly the
+            # pre-event-driven behavior (churn events are telemetry only)
+            self._record_events(events)
+            decision = self.analyze(window_trd)
+            self.actuate(decision)
+            return
+
+        # ---------------------------------------- event-driven mode (ReCA)
+        # characterize this window's accesses on the replay engine's
+        # window reuse distances (no second pass; see core.characterize)
+        feats = characterize_windows(
+            [traces[i] for i in idx],
+            prev_sets=[self._prev_sets.get(i) for i in idx],
+            dists=[None if window_trd is None else window_trd.get(i)
+                   for i in idx],
+            tenant_ids=idx)
+        for k, i in enumerate(idx):
+            self._prev_sets[i] = feats.address_sets[k]
+        events.extend(ReconfigEvent(win, e.tenant, e.reason, e.score)
+                      for e in self.detector.update(feats, win, idx))
+        self._pending_windows += 1
+        if self._pending_windows >= self.reconfig_interval:
+            events.append(ReconfigEvent(win, -1, "interval"))
+        if events:
+            # a multi-window accumulation invalidates the single-window
+            # precomputed distances; the Analyzer re-counts the full span
+            wtrd = window_trd if self._pending_windows == 1 else None
+            self._record_events(events)
+            decision = self.analyze(wtrd, trigger=tuple(events))
+            self.actuate(decision)
+            self._pending_windows = 0
 
     # ------------------------------------------------------------- metrics
     def allocated_sizes(self) -> np.ndarray:
@@ -358,4 +485,10 @@ class ECICacheManager:
             # eviction pressure stays vectorized), over all replayed windows
             "ro_fallback_windows": self.ro_fallback_windows,
             "tenant_windows": self.tenant_windows,
+            # event-driven telemetry: replayed vs analyzed windows and the
+            # cumulative reconfiguration-event count (the `events` deque
+            # itself is bounded by history_limit)
+            "windows_run": self.windows_run,
+            "windows_analyzed": self.windows_analyzed,
+            "reconfig_events": self.reconfig_events,
         }

@@ -1,0 +1,245 @@
+"""Characterization feature pass + phase detector, property-tested.
+
+Three contracts from ``repro.core.characterize``:
+
+  * the batched ``characterize_windows`` is **bit-identical** to the
+    naive per-tenant set-loop reference ``characterize_trace`` — cold and
+    warm (previous-window sets threaded), exact and SHARDS-sampled, and
+    on the replay engine's precomputed window-distance path;
+  * the SHARDS-sampled working-set estimate lands within its stated
+    Horvitz–Thompson error bars of the exact count;
+  * the hysteresis ``PhaseDetector`` hits precision/recall >= 0.9 with
+    detection latency <= 2 windows on the labeled scenario suite, and an
+    event-driven manager at ``reconfig_interval=1`` makes decisions
+    bit-identical to the fixed-Δt manager (the detector only *adds*
+    analyze triggers; with the clock at every window nothing changes).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from oracle import examples, mk_trace, trace_strategy
+
+from repro.core import WritePolicy, simulate_many
+from repro.core.characterize import (PhaseDetector, characterize_salt,
+                                     characterize_trace,
+                                     characterize_windows)
+from repro.core.manager import ECICacheManager
+from repro.core.simulator import LRUCache
+from repro.data.scenarios import SCENARIOS, replay_scenario
+from repro.data.traces import msr_trace
+
+FEATURE_FIELDS = ("stride_hist", "seq_fraction", "read_fraction",
+                  "write_ratio", "working_set", "jaccard_drift",
+                  "reuse_intensity", "sample_rates")
+
+
+def assert_features_equal(got, k: int, ref) -> None:
+    """Row k of a batched WindowFeatures == the single-tenant reference."""
+    for f in FEATURE_FIELDS:
+        g = np.asarray(getattr(got, f))[k]
+        w = np.asarray(getattr(ref, f))[0]
+        assert np.array_equal(g, w), (f, g, w)
+    assert np.array_equal(got.address_sets[k], ref.address_sets[0])
+
+
+@settings(max_examples=examples(40), deadline=None)
+@given(st.lists(trace_strategy(max_n=50, max_addr=12), min_size=1,
+                max_size=4),
+       st.lists(trace_strategy(max_n=50, max_addr=12), min_size=1,
+                max_size=4))
+def test_fused_matches_naive_cold_and_warm(win0, win1):
+    """Exact path: batched == naive, first window and with drift."""
+    n = min(len(win0), len(win1))
+    t0 = [mk_trace(w) for w in win0[:n]]
+    t1 = [mk_trace(w) for w in win1[:n]]
+    cold = characterize_windows(t0)
+    refs0 = [characterize_trace(tr) for tr in t0]
+    for k in range(n):
+        assert_features_equal(cold, k, refs0[k])
+    warm = characterize_windows(t1, prev_sets=list(cold.address_sets))
+    for k in range(n):
+        ref = characterize_trace(t1[k], prev_set=cold.address_sets[k])
+        assert_features_equal(warm, k, ref)
+
+
+@settings(max_examples=examples(30), deadline=None)
+@given(st.lists(trace_strategy(max_n=60, max_addr=40), min_size=1,
+                max_size=4),
+       st.sampled_from([0.3, 0.5, 0.8]),
+       st.integers(0, 50))
+def test_fused_matches_naive_sampled(wins, rate, id0):
+    """SHARDS path: batched == naive on the identically-filtered
+    sub-trace, with explicit tenant ids salting the filters."""
+    traces = [mk_trace(w) for w in wins]
+    ids = list(range(id0, id0 + len(traces)))
+    got = characterize_windows(traces, sample_rate=rate, tenant_ids=ids)
+    for k, tr in enumerate(traces):
+        ref = characterize_trace(tr, rate=rate,
+                                 salt=characterize_salt(ids[k]))
+        assert_features_equal(got, k, ref)
+
+
+def test_fused_matches_naive_on_msr_mixes():
+    """Deterministic multi-window check on realistic mixes, including the
+    precomputed-distance path from the batch replay engine."""
+    names = ["wdev_0", "hm_1", "prn_1", "rsrch_2"]
+    prev = [None] * len(names)
+    caches = [LRUCache(64) for _ in names]
+    for w in range(3):
+        traces = [msr_trace(nm, 500, seed=10 * w + i)
+                  for i, nm in enumerate(names)]
+        _, rds = simulate_many(
+            traces, policies=[WritePolicy.WB] * len(names),
+            t_fast=1.0, t_slow=20.0, caches=caches, return_window_rd=True)
+        plain = characterize_windows(traces, prev_sets=prev)
+        fused = characterize_windows(traces, prev_sets=prev, dists=list(rds))
+        for k, tr in enumerate(traces):
+            ref = characterize_trace(tr, prev_set=prev[k])
+            assert_features_equal(plain, k, ref)
+            assert_features_equal(fused, k, ref)
+        prev = list(plain.address_sets)
+
+
+@pytest.mark.parametrize("rate", [0.2, 0.5])
+def test_sampled_working_set_within_error_bars(rate):
+    """HT working-set estimate within ~4/sqrt(kept) relative error."""
+    for i, nm in enumerate(["prn_1", "usr_0", "stg_1"]):
+        tr = msr_trace(nm, 6000, seed=i)
+        exact = characterize_trace(tr)
+        smp = characterize_trace(tr, rate=rate, salt=characterize_salt(i))
+        ws_true = float(exact.working_set[0])
+        ws_est = float(smp.working_set[0])
+        kept_distinct = smp.address_sets[0].size
+        rel_err = abs(ws_est - ws_true) / ws_true
+        assert rel_err <= 4.0 / np.sqrt(max(kept_distinct, 1)), \
+            (nm, rate, ws_true, ws_est, kept_distinct)
+
+
+# ------------------------------------------------------- phase detection
+def _match(run, detected, bound=2):
+    truth = run.true_changes()
+    matched: dict[tuple, int] = {}
+    used = set()
+    for (w, t) in sorted(set(detected)):
+        for (tw, tt) in truth:
+            if tt == t and (tw, tt) not in matched and 0 <= w - tw <= bound:
+                matched[(tw, tt)] = w - tw
+                used.add((w, t))
+                break
+    fp = [e for e in sorted(set(detected)) if e not in used]
+    return matched, fp, len(truth)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_detector_quality_on_labeled_scenarios(seed):
+    """Precision/recall >= 0.9, detection latency <= 2 windows, across
+    the whole labeled scenario suite (detector driven standalone — no
+    manager, no replay — so this isolates the characterize+detect path)."""
+    tp = fp_n = truth_n = 0
+    max_lat = 0
+    for name, build in SCENARIOS.items():
+        run = build(seed=seed)
+        det = PhaseDetector(w_threshold=0.5)
+        prev: dict[int, np.ndarray] = {}
+        detected = []
+        for w in range(run.n_windows):
+            idx = [t for t in range(run.n_tenants)
+                   if run.traces[w][t] is not None]
+            if not idx:
+                continue
+            for t in range(run.n_tenants):
+                if run.retire_windows[t] == w:
+                    det.forget(t)
+                    prev.pop(t, None)
+            feats = characterize_windows(
+                [run.traces[w][t] for t in idx],
+                prev_sets=[prev.get(t) for t in idx], tenant_ids=idx)
+            for k, t in enumerate(idx):
+                prev[t] = feats.address_sets[k]
+            detected += [(e.window, e.tenant)
+                         for e in det.update(feats, w, idx)]
+        matched, false_pos, n_truth = _match(run, detected)
+        tp += len(matched)
+        fp_n += len(false_pos)
+        truth_n += n_truth
+        if matched:
+            max_lat = max(max_lat, max(matched.values()))
+    precision = tp / max(tp + fp_n, 1)
+    recall = tp / max(truth_n, 1)
+    assert precision >= 0.9, (precision, tp, fp_n)
+    assert recall >= 0.9, (recall, tp, truth_n)
+    assert max_lat <= 2, max_lat
+
+
+def test_detector_single_event_per_change():
+    """A step change in a stationary stream yields exactly one event
+    (hysteresis + post-trigger cold restart), and the detector re-arms
+    for a later change."""
+    det = PhaseDetector()
+    rng = np.random.default_rng(0)
+
+    def feats(read_frac, base):
+        tr = mk_trace([(int(a) + base, bool(r < read_frac))
+                       for a, r in zip(rng.integers(0, 40, 300),
+                                       rng.random(300))])
+        return characterize_windows([tr])
+
+    events = []
+    for w in range(14):
+        if w < 5:
+            f = feats(0.9, 0)
+        elif w < 10:
+            f = feats(0.1, 10_000)     # phase change at w=5
+        else:
+            f = feats(0.9, 20_000)     # and back at w=10
+        events += det.update(f, w, [0])
+    assert [e.window for e in events] == [5, 10], events
+
+
+def test_event_driven_interval1_matches_fixed_dt():
+    """phase_detect=True + reconfig_interval=1 analyzes every window,
+    so decisions (sizes + policies) are bit-identical to detector-off."""
+    names = ["wdev_0", "hm_1", "prn_1", "web_0"]
+    kw = dict(c_min=20, initial_blocks=30, t_fast=1.0, t_slow=20.0,
+              flush_cost=10.0)
+    m_fix = ECICacheManager(600, names, **kw)
+    m_evt = ECICacheManager(600, names, phase_detect=True,
+                            reconfig_interval=1, **kw)
+    for w in range(4):
+        traces = [msr_trace(nm, 400, seed=100 * w + i)
+                  for i, nm in enumerate(names)]
+        m_fix.run_window(traces)
+        m_evt.run_window(traces)
+        d_fix, d_evt = m_fix.history[-1], m_evt.history[-1]
+        assert np.array_equal(d_fix.sizes, d_evt.sizes)
+        assert d_fix.policies == d_evt.policies
+        assert np.array_equal(m_fix.allocated_sizes(),
+                              m_evt.allocated_sizes())
+    assert m_fix.windows_analyzed == m_evt.windows_analyzed == 4
+    s_fix, s_evt = m_fix.summary(), m_evt.summary()
+    for k in ("accesses", "mean_latency", "cache_writes",
+              "read_hit_ratio"):
+        assert s_fix[k] == s_evt[k], k
+    # telemetry: the fixed manager records no events, the event-driven
+    # one at least its interval ticks
+    assert s_fix["reconfig_events"] == 0
+    assert s_evt["reconfig_events"] >= 4
+
+
+def test_event_driven_accumulates_windows_between_analyzes():
+    """With the clock at N windows and a stationary workload, analyzes
+    happen ~1/N as often, and each analyze sees the accumulated span
+    (windows clear only on actuate)."""
+    names = ["hm_1", "prn_1"]
+    mgr = ECICacheManager(400, names, c_min=20, initial_blocks=30,
+                          phase_detect=True, reconfig_interval=3)
+    for w in range(6):
+        mgr.run_window([msr_trace(nm, 300, seed=50 * w + i)
+                        for i, nm in enumerate(names)])
+    assert mgr.windows_run == 6
+    assert mgr.windows_analyzed == 2          # windows 2 and 5 (clock)
+    reasons = [e.reason for e in mgr.events]
+    assert reasons.count("interval") == 2
+    # every analyze was triggered, and the trigger is on the decision
+    assert all(d.trigger for d in mgr.history)

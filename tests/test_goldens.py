@@ -23,6 +23,8 @@ import numpy as np
 
 from repro.core import make_manager, request_type_mix, write_ratio
 from repro.core.write_policy import assign_write_policy
+from repro.data.scenarios import (churn, per_tenant_latency,
+                                  replay_scenario, scan_flood)
 from repro.data.traces import msr_trace
 
 GOLDEN_PATH = pathlib.Path(__file__).parent / "goldens" / "figs_small.json"
@@ -100,9 +102,47 @@ def _fig16():
     return out
 
 
+def _scenarios():
+    """Scenario suite: per-scheme isolation metric on a small scan flood
+    + the event-driven reconfiguration log on the churn scenario."""
+    flood = scan_flood(n_victims=2, n_windows=6, flood_at=2, n_victim=800,
+                       n_benign=400, cycle_base=400, cycle_step=100,
+                       seed=0)
+    isolation = {}
+    for scheme in ("eci", "static"):
+        def factory(names, _s=scheme):
+            return make_manager(_s, 1024, names, c_min=32,
+                                initial_blocks=32, engine="batch", **SIM)
+        m_full, im_full = replay_scenario(flood, factory)
+        m_solo, im_solo = replay_scenario(flood, factory,
+                                          exclude={flood.aggressor})
+        lat_full = per_tenant_latency(m_full, im_full)
+        lat_solo = per_tenant_latency(m_solo, im_solo)
+        degr = {str(v): float((lat_full[v] - lat_solo[v])
+                              / max(lat_solo[v], 1e-12))
+                for v in sorted(lat_solo) if v != flood.aggressor}
+        isolation[scheme] = {
+            "per_victim_degradation": degr,
+            "max_degradation": max(degr.values()),
+        }
+
+    run = churn(seed=0)
+    mgr, _ = replay_scenario(
+        run, lambda names: make_manager(
+            "eci", 2000, names, c_min=50, initial_blocks=50,
+            engine="batch", phase_detect=True, reconfig_interval=4, **SIM))
+    return {
+        "isolation": isolation,
+        "churn_events": [[e.window, e.tenant, e.reason]
+                         for e in mgr.events],
+        "churn_windows_analyzed": int(mgr.windows_analyzed),
+        "churn_windows_run": int(mgr.windows_run),
+    }
+
+
 def compute_goldens():
     return {"fig10": _fig10(), "fig12": _fig12(), "fig14": _fig14(),
-            "fig16": _fig16()}
+            "fig16": _fig16(), "scenarios": _scenarios()}
 
 
 def _diff(path, want, got, out):
@@ -140,6 +180,11 @@ def test_goldens_sanity():
         g["fig10"]["centaur"]["infeasible_windows"]
     assert g["fig16"]["eci"]["total"] < g["fig16"]["centaur"]["total"]
     assert np.isfinite(g["fig14"]["eci"]["performance"])
+    iso = g["scenarios"]["isolation"]
+    assert iso["eci"]["max_degradation"] <= \
+        0.5 * iso["static"]["max_degradation"]
+    reasons = {e[2] for e in g["scenarios"]["churn_events"]}
+    assert {"join", "retire"} <= reasons
 
 
 if __name__ == "__main__":

@@ -1,0 +1,235 @@
+"""Tenant-churn correctness: manager, scenarios, and the serving path.
+
+The budget/floor property of ``test_baselines_budget`` extended to churn
+sequences (tenants joining and retiring mid-run, fixed-Δt and
+event-driven), plus the churn guarantees the scenario suite relies on:
+
+  * ``sum(sizes) <= capacity`` with per-tenant ``c_min`` floors honored
+    on every analyzed window of any join/retire schedule;
+  * a retired tenant's quota is actually redistributed (survivors' total
+    grows under capacity pressure) and its partitions drop to zero;
+  * surviving tenants' SHARDS-sampled monitor curves are bit-identical
+    to a run where the retired neighbor never existed (retirement must
+    not perturb anyone else's salts or estimates);
+  * the tiered serving path (``TieredKVCache``) carries joins through
+    ``add_tenant`` → ``"join"`` reconfiguration events → quotas for the
+    newcomer, with every per-tenant structure extended;
+  * event-driven telemetry respects ``history_limit`` (the ``events``
+    deque is bounded; ``reconfig_events`` keeps the true total).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from oracle import examples
+
+from repro.cache import BlockPool, TieredKVCache
+from repro.core import ECICacheManager
+from repro.data.scenarios import SCENARIOS, churn, replay_scenario
+from repro.data.traces import msr_trace
+
+NAMES = ["wdev_0", "hm_1", "prn_1", "web_0", "prxy_0", "ts_0"]
+SIM = dict(t_fast=1.0, t_slow=20.0, flush_cost=10.0)
+
+
+def _assert_budget(mgr):
+    d = mgr.history[-1]
+    act = [i for i, t in enumerate(mgr.tenants) if t.active]
+    assert int(d.sizes.sum()) <= mgr.capacity
+    assert int(mgr.allocated_sizes().sum()) <= mgr.capacity
+    # retired tenants hold nothing
+    for i, t in enumerate(mgr.tenants):
+        if not t.active:
+            assert t.cache.capacity == 0
+            assert d.sizes[i] == 0
+    # c_min floors, capped by each tenant's useful mass and a fair share
+    if act:
+        floors = np.minimum(mgr.c_min,
+                            [mgr.tenants[i].urd_size for i in act])
+        floors = np.minimum(floors, mgr.capacity // len(act))
+        assert np.all(d.sizes[act] >= floors), (d.sizes[act], floors)
+
+
+# ops per window: 0 = steady, 1 = join a tenant, 2 = retire one
+@settings(max_examples=examples(15), deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=2, max_size=5),
+       st.booleans(), st.integers(0, 1000))
+def test_budget_and_floors_under_churn(ops, event_driven, seed):
+    rng = np.random.default_rng(seed)
+    capacity, c_min = 300, 15
+    mgr = ECICacheManager(capacity, NAMES[:3], c_min=c_min,
+                          initial_blocks=20,
+                          phase_detect=event_driven, reconfig_interval=1,
+                          **SIM)
+    alive = [0, 1, 2]
+    for w, op in enumerate(ops):
+        if op == 1 and len(mgr.tenants) < len(NAMES):
+            i = mgr.add_tenant(NAMES[len(mgr.tenants)])
+            alive.append(i)
+        retiring = None
+        if op == 2 and len(alive) > 1:
+            retiring = alive.pop(int(rng.integers(0, len(alive))))
+        traces = [None] * len(mgr.tenants)
+        for i in alive:
+            traces[i] = msr_trace(NAMES[i], 150, seed=31 * w + i)
+        mgr.run_window(traces)
+        assert mgr.history, "interval=1 must analyze every window"
+        _assert_budget(mgr)
+        if retiring is not None:
+            assert not mgr.tenants[retiring].active
+    # churn telemetry: every join/retire left an event (event-driven
+    # managers also log their interval/phase triggers)
+    n_churn = sum(1 for e in mgr.events if e.reason in ("join", "retire"))
+    joined = len(mgr.tenants) - 3
+    retired = sum(1 for t in mgr.tenants if not t.active)
+    assert n_churn == joined + retired
+
+
+def test_retired_quota_redistributed():
+    """Under pressure (sum of demands > capacity), a retirement frees
+    real blocks for the survivors."""
+    capacity = 150
+    mgr = ECICacheManager(capacity, NAMES[:3], c_min=10, initial_blocks=20,
+                          **SIM)
+    for w in range(2):
+        mgr.run_window([msr_trace(nm, 600, seed=10 * w + i)
+                        for i, nm in enumerate(NAMES[:3])])
+    before = mgr.history[-1].sizes.copy()
+    assert not mgr.history[-1].feasible       # genuinely constrained
+    mgr.run_window([msr_trace(NAMES[0], 600, seed=100),
+                    msr_trace(NAMES[1], 600, seed=101), None])
+    after = mgr.history[-1].sizes
+    assert after[2] == 0
+    assert int(after[:2].sum()) > int(before[:2].sum())
+    assert [e.reason for e in mgr.events].count("retire") == 1
+
+
+@pytest.mark.parametrize("engine", ["batch", "lru"])
+def test_survivor_curves_unchanged_by_neighbor_retirement(engine):
+    """SHARDS-sampled monitor output for the survivors is bit-identical
+    whether a third tenant retires mid-run or never existed at all."""
+    kw = dict(c_min=10, initial_blocks=20, sample_rate=0.5, engine=engine,
+              **SIM)
+    m_churn = ECICacheManager(400, NAMES[:3], **kw)
+    m_clean = ECICacheManager(400, NAMES[:2], **kw)
+
+    def windows(w):
+        return [msr_trace(nm, 400, seed=50 * w + i)
+                for i, nm in enumerate(NAMES[:3])]
+
+    for w in range(3):
+        tr = windows(w)
+        # the neighbor retires after window 0
+        m_churn.run_window(tr if w == 0 else tr[:2] + [None])
+        m_clean.run_window(tr[:2])
+        assert m_churn.windows_analyzed == m_clean.windows_analyzed
+        for i in range(2):
+            a, b = m_churn.tenants[i], m_clean.tenants[i]
+            assert a.urd_size == b.urd_size
+            assert a.policy == b.policy
+            grid = [1, 5, 20, 80, 200]
+            assert [a.h_fn(c) for c in grid] == [b.h_fn(c) for c in grid]
+
+
+def test_scenario_churn_replay_budget_every_window():
+    """The churn scenario through ``replay_scenario``: budget + floors
+    hold on every analyzed window, joins/retires land as events."""
+    run = churn(seed=0)
+    capacity = 2000
+
+    def factory(names):
+        return ECICacheManager(capacity, names, c_min=50, initial_blocks=50,
+                               phase_detect=True, reconfig_interval=1,
+                               **SIM)
+    mgr, imap = replay_scenario(run, factory)
+    assert mgr.windows_run == run.n_windows
+    _assert_budget(mgr)
+    reasons = [e.reason for e in mgr.events]
+    assert reasons.count("join") == int(np.sum(run.join_windows > 0))
+    assert reasons.count("retire") == int(
+        np.sum(run.retire_windows < run.n_windows))
+    # every scenario tenant was replayed under its own manager slot
+    assert sorted(imap) == list(range(run.n_tenants))
+
+
+def test_scenario_generator_labels_are_consistent():
+    """Generator invariants the detection tests lean on: labels cover
+    active cells, changes only at labeled phase starts, address spaces
+    of different (tenant, phase) slots never collide."""
+    for name, build in SCENARIOS.items():
+        run = build(seed=1)
+        for w in range(run.n_windows):
+            for t in range(run.n_tenants):
+                tr = run.traces[w][t]
+                assert (tr is None) == (run.labels[w, t] < 0)
+                if tr is not None:
+                    lab = run.access_labels(w, t)
+                    assert lab.shape == (len(tr),)
+                    assert np.all(lab == run.labels[w, t])
+        # a change window implies the label actually changed
+        for (w, t) in run.true_changes():
+            assert w > 0 and run.labels[w, t] != run.labels[w - 1, t]
+        # per-tenant address spaces are disjoint across tenants
+        for t in range(run.n_tenants):
+            mine = np.concatenate(
+                [run.traces[w][t].addrs for w in range(run.n_windows)
+                 if run.traces[w][t] is not None])
+            others = [np.concatenate(
+                [run.traces[w][u].addrs for w in range(run.n_windows)
+                 if run.traces[w][u] is not None])
+                for u in range(run.n_tenants) if u != t]
+            if others:
+                assert not np.intersect1d(mine,
+                                          np.concatenate(others)).size
+
+
+def test_tiered_serving_churn():
+    """Join on the serving path: every per-tenant structure extends, the
+    next rebalance records the join and sizes the newcomer."""
+    pool = BlockPool(64, 8, 2, 2, 16, allocate_device=False)
+    mgr = ECICacheManager(48, ["a", "b"], c_min=4, initial_blocks=8,
+                          **SIM)
+    tiered = TieredKVCache(pool, mgr, window_events=10 ** 9)
+    rng = np.random.default_rng(0)
+    for r in range(30):
+        for t in (0, 1):
+            tiered.access_page(t, ("t", t, int(rng.integers(0, 12))),
+                               fresh=(r == 0))
+    i = tiered.add_tenant("late")
+    assert i == 2
+    assert len(tiered.stats) == 3 and i in tiered.quotas \
+        and i in tiered.host_lru and i in tiered.host_quotas
+    for r in range(30):
+        for t in (0, 1, 2):
+            tiered.access_page(t, ("t", t, int(rng.integers(0, 12))),
+                               fresh=(t == 2 and r == 0))
+    tiered.rebalance()
+    assert [e.reason for e in mgr.events].count("join") == 1
+    assert mgr.history[-1].trigger  # the join rode on the decision
+    assert tiered.quotas[2] is not None and tiered.quotas[2] >= 0
+    assert sum(q for q in tiered.quotas.values() if q) <= mgr.capacity
+    # retirement through the serving path still redistributes
+    tiered.finish_tenant(0)
+    for r in range(10):
+        for t in (1, 2):
+            tiered.access_page(t, ("t", t, int(rng.integers(0, 12))))
+    tiered.rebalance()
+    assert tiered.quotas[0] == 0
+    assert not mgr.tenants[0].active
+
+
+def test_events_respect_history_limit():
+    """The events deque is bounded by history_limit while the summary
+    counter keeps the cumulative total."""
+    mgr = ECICacheManager(300, NAMES[:2], c_min=10, initial_blocks=20,
+                          phase_detect=True, reconfig_interval=1,
+                          history_limit=3, **SIM)
+    for w in range(8):
+        mgr.run_window([msr_trace(nm, 120, seed=9 * w + i)
+                        for i, nm in enumerate(NAMES[:2])])
+    assert len(mgr.events) <= 3
+    assert len(mgr.history) <= 3
+    s = mgr.summary()
+    assert s["reconfig_events"] >= 8          # one interval tick per window
+    assert s["windows_run"] == 8
+    assert s["windows_analyzed"] == 8
