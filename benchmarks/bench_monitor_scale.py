@@ -2,7 +2,7 @@
 
 Measures one Δt decision (Monitor reuse distances → hit-ratio curves →
 Alg.-3 write ratios → Eq.-2 partition) for tenant counts {16, 128, 1024}
-on synthetic mixes, three ways:
+on synthetic mixes, four ways:
 
   * ``seed``    — the pre-fusion control plane: a Python loop per tenant
     (``reuse_distances_fast`` + ``build_hit_ratio_function`` +
@@ -12,22 +12,33 @@ on synthetic mixes, three ways:
   * ``fused``   — ``analyze_windows`` exact (one counting pass, batched
     curves/ratios) + the vectorized ``greedy_allocate`` fast walk.
     Allocations must be **bit-identical** to seed.
+  * ``device``  — ``DeviceWindowPipeline``: the whole decision as one
+    jitted device program (``core.device_pipeline``), one host sync per
+    window.  Timed after a warm-up decision so jit compilation stays out
+    of the row; a profiled run asserts the ≤1-sync property, and
+    ``--profile`` reports the per-stage breakdown (count/curve/
+    write_ratio/partition, via staged fenced launches) next to the host
+    pipeline's stage times.
   * ``sampled`` — ``analyze_windows`` with SHARDS ``sample_rate="auto"``
     + the fast walk: the thousand-tenant default.
 
-Checks: fused ≡ seed allocations at every scale; sampled allocations
-within 5% aggregate latency of exact both on the synthetic mixes and on
-the Table-3 workloads (prxy_0/prn_1/hm_1/web_1, default auto-tuner);
-≥50× seed→sampled speedup at 1024 tenants (full mode only); and — the
+Checks: fused ≡ seed allocations at every scale; device ≡ fused
+allocations (bit-identical off TPU; aggregate-latency tolerance on TPU
+f32); ``device_syncs_le_1``; sampled allocations within 5% aggregate
+latency of exact both on the synthetic mixes and on the Table-3
+workloads (prxy_0/prn_1/hm_1/web_1, default auto-tuner); ≥50×
+seed→sampled speedup at 1024 tenants (full mode only); the
 segment-aligned-padding gate — the **exact fused path must beat the
 per-tenant loop outright**: ``speedup_fused >= 2.0`` at the largest
-tenant count of the run (``fused_speedup_ge: 2.0`` in the emitted
-``checks``).  Results are written to ``BENCH_monitor_scale.json``.
+tenant count of the run; and, on accelerator hosts, the device-pipeline
+gate ``speedup_device >= 1.5`` over the fused host path there.  All
+engine timings are best-of-reps (single-shot timings flaked the 2.0
+fused gate on noisy boxes).  Results are written to
+``BENCH_monitor_scale.json``.
 
 ``--smoke`` (the CI configuration) runs the 16-tenant point only with a
 short window — fast, and still fails on any control-plane hot-path
-regression, *including* the fused-speedup gate (seed and fused are
-best-of-reps there to damp CI wall-clock noise).
+regression, *including* the fused-speedup and device gates.
 """
 from __future__ import annotations
 
@@ -37,7 +48,8 @@ import time
 
 import numpy as np
 
-from repro.core import (Trace, aggregate_latency, analyze_windows,
+from repro.core import (DeviceWindowPipeline, StageProfile, Trace,
+                        aggregate_latency, analyze_windows,
                         build_hit_ratio_function, greedy_allocate,
                         reuse_distances_fast, urd_cache_blocks)
 from repro.core.batch_sim import _accel_default
@@ -86,18 +98,25 @@ def fused_path(traces, capacity, c_min, sample_rate=None, target=256,
     return part, mon
 
 
+def device_path(traces, capacity, c_min, profile=None):
+    pipe = DeviceWindowPipeline(capacity=capacity, c_min=c_min,
+                                t_fast=SIM["t_fast"], t_slow=SIM["t_slow"])
+    return pipe.run(traces, profile=profile)
+
+
 def run_scale(n_tenants: int, n: int, c_min: int = 50,
-              reps: int = 3, engine_reps: int = 1) -> dict:
+              reps: int = 3, engine_reps: int = 2,
+              profile: bool = False) -> dict:
     traces = synthetic_mix(n_tenants, n, seed=7)
     # capacity between Σc_min and ΣURD so the partitioner actually walks
     urd_total = sum(h.max_useful_size
                     for h in analyze_windows(traces, "urd").curves)
     capacity = max(n_tenants * c_min + 1, int(0.35 * urd_total))
 
-    # seed/fused are seconds-long at scale and stable single-shot; the
-    # smoke configuration raises engine_reps (best-of) because its
-    # millisecond-scale runs would otherwise flake the speedup gate on
-    # noisy CI boxes
+    # every engine timing is best-of-reps: single-shot full-mode runs
+    # flaked the 2.0 fused-speedup gate on noisy boxes (a one-off 1.62x
+    # reading at 1024 tenants), and the smoke configuration's
+    # millisecond-scale runs need it even more
     seed_s = fused_s = float("inf")
     for _ in range(engine_reps):
         t0 = time.perf_counter()
@@ -108,6 +127,24 @@ def run_scale(n_tenants: int, n: int, c_min: int = 50,
         t0 = time.perf_counter()
         p_fused, _ = fused_path(traces, capacity, c_min)
         fused_s = min(fused_s, time.perf_counter() - t0)
+
+    # device pipeline: one warm-up decision compiles the window program
+    # (and proves the <=1-sync property via the profiled run), then
+    # best-of timed runs measure the steady-state per-window cost
+    sprof = StageProfile()
+    dec = device_path(traces, capacity, c_min, profile=sprof)
+    device_syncs = sprof.syncs_per_window
+    device_s = float("inf")
+    for _ in range(max(engine_reps, 2)):
+        t0 = time.perf_counter()
+        dec = device_path(traces, capacity, c_min)
+        device_s = min(device_s, time.perf_counter() - t0)
+    lat_fused = aggregate_latency(hs_exact, p_fused.sizes, **SIM)
+    lat_dev = aggregate_latency(hs_exact, dec.sizes, **SIM)
+    device_identical = bool(np.array_equal(dec.sizes, p_fused.sizes))
+    # documented TPU f32 tolerance: tie-flips only, compare by objective
+    device_ok = (device_identical if not _accel_default()
+                 else lat_dev <= lat_fused * 1.001)
 
     # the sampled decision runs in milliseconds: always take best-of-reps
     sampled_s = float("inf")
@@ -121,18 +158,44 @@ def run_scale(n_tenants: int, n: int, c_min: int = 50,
     lat_smp = aggregate_latency(hs_exact, p_smp.sizes, **SIM)
     row = {
         "tenants": n_tenants, "n_per_window": n, "capacity": capacity,
-        "seed_s": seed_s, "fused_s": fused_s, "sampled_s": sampled_s,
+        "seed_s": seed_s, "fused_s": fused_s, "device_s": device_s,
+        "sampled_s": sampled_s,
         "speedup_fused": seed_s / max(fused_s, 1e-12),
+        "speedup_device": fused_s / max(device_s, 1e-12),
         "speedup_sampled": seed_s / max(sampled_s, 1e-12),
         "fused_bit_identical": bool(np.array_equal(p_seed.sizes,
                                                    p_fused.sizes)),
+        "device_bit_identical": device_identical,
+        "device_decision_ok": device_ok,
+        "device_syncs_per_window": device_syncs,
         "sampled_latency_ratio": lat_smp / max(lat_exact, 1e-12),
         "mean_expected_error": float(mon_smp.expected_errors.mean()),
     }
+    if profile:
+        # per-stage wall time: host pipeline stages (links/count/curve,
+        # plus the accel route's per-width sync count) next to the device
+        # program's fenced staged breakdown
+        hprof = StageProfile()
+        fused_path_mon = analyze_windows(traces, "urd", profile=hprof)
+        greedy_allocate(fused_path_mon.curves, capacity, SIM["t_fast"],
+                        SIM["t_slow"], c_min=c_min, method="fast")
+        device_path(traces, capacity, c_min,
+                    profile=StageProfile(staged=True))  # compile staged jits
+        dprof = StageProfile(staged=True)
+        device_path(traces, capacity, c_min, profile=dprof)
+        row["profile"] = {"host": hprof.report(),
+                          "device_staged": dprof.report()}
+        for side in ("host", "device_staged"):
+            for st_name, st_s in row["profile"][side]["times_s"].items():
+                emit(f"monitor_scale_T{n_tenants}_{side}_{st_name}",
+                     st_s * 1e6, f"{st_s * 1e3:.1f}ms")
     emit(f"monitor_scale_T{n_tenants}_seed", seed_s * 1e6, f"{seed_s:.3f}s")
     emit(f"monitor_scale_T{n_tenants}_fused", fused_s * 1e6,
          f"speedup={row['speedup_fused']:.1f}x_identical="
          f"{row['fused_bit_identical']}")
+    emit(f"monitor_scale_T{n_tenants}_device", device_s * 1e6,
+         f"speedup_vs_fused={row['speedup_device']:.2f}x_identical="
+         f"{device_identical}_syncs={device_syncs:.0f}")
     emit(f"monitor_scale_T{n_tenants}_sampled", sampled_s * 1e6,
          f"speedup={row['speedup_sampled']:.1f}x_lat_ratio="
          f"{row['sampled_latency_ratio']:.4f}")
@@ -164,12 +227,13 @@ def table3_decision_check(n: int = 8000, target: int = 4096) -> dict:
 
 
 def main(tenant_counts=(16, 128, 1024), n_per_window: int = 8000,
-         smoke: bool = False) -> dict:
+         smoke: bool = False, profile: bool = False) -> dict:
     _accel_default()          # warm the jax backend probe outside timings
-    engine_reps = 1
+    engine_reps = 2
     if smoke:
         tenant_counts, n_per_window, engine_reps = (16,), 2000, 3
-    rows = [run_scale(t, n_per_window, engine_reps=engine_reps)
+    rows = [run_scale(t, n_per_window, engine_reps=engine_reps,
+                      profile=profile)
             for t in tenant_counts]
     # smoke shrinks the tuner target so the sampled path is actually
     # exercised (rate < 1) on the short CI windows
@@ -181,16 +245,27 @@ def main(tenant_counts=(16, 128, 1024), n_per_window: int = 8000,
     checks = {
         "fused_bit_identical_all": all(r["fused_bit_identical"]
                                        for r in rows),
+        "device_bit_identical_all": all(r["device_decision_ok"]
+                                        for r in rows),
+        "device_syncs_le_1": all(r["device_syncs_per_window"] <= 1.0
+                                 for r in rows),
         "sampled_within_5pct_mix": all(r["sampled_latency_ratio"] <= 1.05
                                        for r in rows),
         "table3_sampled_within_5pct": t3["within_5pct"],
         "fused_speedup_ge": big["speedup_fused"] >= 2.0,
+        # the device program's win over the fused host path is an
+        # accelerator property (off TPU both pipelines share the CPU);
+        # the gate arms only on accelerator hosts, the row is always
+        # reported
+        "speedup_device_ge": (big["speedup_device"] >= 1.5
+                              if _accel_default() else True),
     }
     if 1024 in tenant_counts:
         big = next(r for r in rows if r["tenants"] == 1024)
         checks["speedup_1024_ge_50x"] = big["speedup_sampled"] >= 50.0
     out = {"rows": rows, "table3": t3,
-           "checks": checks, "fused_speedup_gate": 2.0}
+           "checks": checks, "fused_speedup_gate": 2.0,
+           "device_speedup_gate": 1.5}
     with open("BENCH_monitor_scale.json", "w") as f:
         json.dump(out, f, indent=2)
     for k, v in checks.items():
@@ -203,12 +278,16 @@ if __name__ == "__main__":
     ap.add_argument("--smoke", action="store_true",
                     help="CI configuration: 16 tenants, short windows; "
                          "equality/latency checks plus the fused-speedup "
-                         "gate (best-of-reps wall clock)")
+                         "and device gates (best-of-reps wall clock)")
+    ap.add_argument("--profile", action="store_true",
+                    help="attach per-stage wall times (host pipeline "
+                         "stages and the device program's fenced staged "
+                         "breakdown) to every row")
     ap.add_argument("--tenants", type=str, default=None,
                     help="comma-separated tenant counts (default 16,128,1024)")
     args = ap.parse_args()
     counts = (tuple(int(x) for x in args.tenants.split(","))
               if args.tenants else (16, 128, 1024))
-    result = main(counts, smoke=args.smoke)
+    result = main(counts, smoke=args.smoke, profile=args.profile)
     if not all(result["checks"].values()):
         raise SystemExit(f"CHECK FAILED: {result['checks']}")

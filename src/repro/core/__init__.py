@@ -11,6 +11,9 @@ from repro.core.batch_sim import (reuse_distances_fast,
 from repro.core.characterize import (PhaseDetector, PhaseEvent,
                                      WindowFeatures, characterize_trace,
                                      characterize_windows)
+from repro.core.device_pipeline import (DeviceWindowPipeline, StageProfile,
+                                        WindowDecision, greedy_walk_device,
+                                        monitor_window_device)
 from repro.core.manager import (AnalyzerDecision, ECICacheManager,
                                 ReconfigEvent, TenantState)
 from repro.core.monitor import MonitorResult, analyze_windows
@@ -34,16 +37,18 @@ from repro.core.write_policy import (WritePolicy, assign_write_policy,
 
 __all__ = [
     "AccessClass", "AnalyzerDecision", "BatchedHitRatioFunctions",
-    "ECICacheManager", "GlobalLRUManager",
+    "DeviceWindowPipeline", "ECICacheManager", "GlobalLRUManager",
     "HitRatioFunction", "LRUCache", "MonitorResult", "PartitionResult",
     "PhaseDetector", "PhaseEvent", "RDResult", "ReconfigEvent", "SimResult",
-    "TenantState", "Trace", "WindowFeatures", "WritePolicy",
+    "StageProfile", "TenantState", "Trace", "WindowDecision",
+    "WindowFeatures", "WritePolicy",
     "aggregate_latency",
     "analyze_windows", "assign_write_policy", "assign_write_policy_levels",
     "auto_sample_rate", "build_hit_ratio_function",
     "build_hit_ratio_functions", "characterize_trace",
     "characterize_windows", "classify_accesses",
-    "greedy_allocate", "make_manager", "max_rd", "pgd_solve",
+    "greedy_allocate", "greedy_walk_device", "make_manager", "max_rd",
+    "monitor_window_device", "pgd_solve",
     "rebalance_levels", "request_type_mix", "reuse_distances",
     "reuse_distances_fast", "reuse_distances_vectorized",
     "ro_token_replay_device", "ro_token_replay_levels_device",

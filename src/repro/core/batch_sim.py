@@ -299,6 +299,35 @@ def padded_segment_layout(bounds: np.ndarray):
     return src, base_pad + loc, base_src, base_pad, Ws, total, bounds[segs]
 
 
+def padded_tape_links(prev: np.ndarray, nxt: np.ndarray, layout
+                      ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Scatter severed/clamped occurrence links onto the padded tape.
+
+    ``prev``/``nxt`` live on the original multi-segment tape
+    (``monitor._segment_links`` semantics); ``layout`` is the tape's
+    ``padded_segment_layout``.  Returns ``(gprev, gnxt, gocc)`` on the
+    padded tape: real entries carry their links shifted into padded
+    coordinates, padding rows the cold/non-occupying sentinels
+    (``gprev = -1``, self-``gnxt``, ``gocc = 0``) whose contributions to
+    any in-segment dominance count are identically zero.  This is the one
+    ingest format shared by the per-width accelerator launches
+    (``kernels.cache_sim.ops.stack_distances_segments_accel``) and the
+    fused device window program (``core.device_pipeline``).
+    """
+    src, tpos, base_src, base_pad, widths, total, _ = layout
+    n = prev.shape[0]
+    if src is None:                              # layout kept tape order
+        src = np.arange(n, dtype=tpos.dtype if tpos.size else np.int64)
+    shift = (tpos - src).astype(np.int64)
+    gprev = np.full(total, -1, dtype=np.int64)
+    gprev[tpos] = np.where(prev[src] >= 0, shift + prev[src], -1)
+    gnxt = np.arange(total, dtype=np.int64)
+    gnxt[tpos] = base_pad.astype(np.int64) + (nxt[src] - base_src)
+    gocc = np.zeros(total, dtype=np.int32)
+    gocc[tpos] = 1
+    return gprev, gnxt, gocc
+
+
 def count_prev_ge_padded(y: np.ndarray, seg_widths: np.ndarray) -> np.ndarray:
     """Width-bounded merge-tree counting on a padded, segment-aligned tape.
 

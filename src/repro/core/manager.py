@@ -176,9 +176,12 @@ class ECICacheManager:
                  auto_sample_tenants: int = 256,
                  phase_detect: bool = False, reconfig_interval: int = 1,
                  phase_hi: float = 0.25, phase_lo: float = 0.10,
-                 phase_ema: float = 0.5):
+                 phase_ema: float = 0.5, pipeline: str = "host"):
         if engine not in ("batch", "lru"):
             raise ValueError(f"engine must be 'batch' or 'lru', got {engine!r}")
+        if pipeline not in ("host", "device"):
+            raise ValueError(
+                f"pipeline must be 'host' or 'device', got {pipeline!r}")
         self.capacity = int(capacity)
         self.capacity2 = int(capacity2)
         self.c_min = int(c_min)
@@ -198,6 +201,10 @@ class ECICacheManager:
         self.percentile = percentile
         self.partition_fn = partition_fn
         self.engine = engine
+        # "device" routes each analyze through the fused device window
+        # program (core.device_pipeline); falls back to the host pipeline
+        # when percentile < 100 (the device program is percentile-free)
+        self.pipeline = pipeline
         init = int(initial_blocks if initial_blocks is not None else c_min)
         self.tenants = [TenantState(n, LRUCache(init)) for n in tenant_names]
         self.history: collections.deque[AnalyzerDecision] = \
@@ -283,12 +290,16 @@ class ECICacheManager:
         act = [i for i, t in enumerate(self.tenants) if t.active]
         traces = [self.tenants[i].window_trace() for i in act]
         rate = self.effective_sample_rate()
-        pre = ([window_trd.get(i) for i in act] if rate is None else None)
+        pipe = (self.pipeline if self.percentile >= 100.0 else "host")
+        # the device program recounts on device, so precomputed TRD arrays
+        # are only forwarded to the host pipeline
+        pre = ([window_trd.get(i) for i in act]
+               if rate is None and pipe == "host" else None)
         mon = analyze_windows(
             traces, kind=self.rd_kind, percentile=self.percentile,
             sample_rate=rate, window_seed=self.windows_analyzed,
             sample_target=self.sample_target, sample_floor=self.sample_floor,
-            precomputed_trd=pre, tenant_ids=act)
+            precomputed_trd=pre, tenant_ids=act, pipeline=pipe)
         self.windows_analyzed += 1
         for k, i in enumerate(act):
             t = self.tenants[i]

@@ -1,10 +1,42 @@
-"""Fused multi-tenant Monitor/Analyzer — one counting pass for all tenants.
+"""Fused multi-tenant Monitor/Analyzer — one counting pass for all tenants,
+optionally one *device program* for the whole window.
 
 ``ECICacheManager.analyze`` used to loop tenants in Python: a reuse-distance
 pass, ``build_hit_ratio_function`` and the Alg.-3 write ratio per tenant, so
 the control plane — not the simulated I/O — dominated at the ROADMAP's
 thousand-tenant scale.  ``analyze_windows`` replaces that loop with batched
-array code end to end:
+array code, in one of two pipelines:
+
+  * ``pipeline="host"`` (default): the fused numpy path below — one padded
+    tape, one counting pass, segment reductions.  Stage boundaries still
+    cross the host: the counting pass syncs once per distinct padded width
+    (``stack_distances_segments_accel``), and curves/write ratios/URD sizes
+    are numpy reductions over the fetched distances.
+  * ``pipeline="device"``: the same window, computed by **one jitted
+    device program per window shape bucket** (``core.device_pipeline``).
+    Ingest scatters the padded tape's links once, then counting
+    (``ops.segment_counts_device`` — Pallas kernel on TPU, the
+    ``cache_sim_segments_tree`` merge-sort-tree oracle elsewhere), the
+    stacked-breakpoint curve build (a device twin of
+    ``BatchedHitRatioFunctions``, reduced by per-row sort + run-length
+    scatter), Alg.-3 write ratios (device bincount) and the URD sizes all
+    run inside a single jit — **zero host syncs inside the window**, one
+    sync to fetch the results.  Off TPU the program runs under
+    ``jax.experimental.enable_x64`` and every output is bit-identical to
+    the host pipeline (differential-tested in ``tests/test_monitor_scale``
+    across both routes); on TPU it runs in f32/int32 with a documented
+    tolerance.  ``precomputed_trd`` is ignored on this path — the program
+    recounts on device (deterministically equal), which beats shipping
+    per-tenant host arrays back in.  ``DeviceWindowPipeline`` extends the
+    same program through the partition stage and double-buffers ingest
+    across windows.
+
+Both pipelines accept a ``StageProfile`` (``profile=``) recording per-stage
+wall time and host-sync counts — ``benchmarks/bench_monitor_scale.py
+--profile`` reports the breakdown, and the ≤1-sync property of the device
+program is asserted in tests.
+
+The fused host path:
 
   * **One padded tape.**  All tenants' Δt window traces are concatenated
     into a single access tape with per-tenant segment offsets.  Occurrence
@@ -61,6 +93,7 @@ tested in ``tests/test_monitor_scale.py``.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 
 import numpy as np
@@ -174,9 +207,15 @@ def _segment_links(addrs: np.ndarray, tid: np.ndarray,
     return prev, nxt
 
 
+def _pstage(profile, name: str):
+    """Profile a host-pipeline stage (no-op without a ``StageProfile``)."""
+    return (profile.stage(name) if profile is not None
+            else contextlib.nullcontext())
+
+
 def _sd_pass(prev: np.ndarray, nxt_c: np.ndarray, backend: str,
              bounds: np.ndarray | None = None,
-             layout=None) -> np.ndarray:
+             layout=None, profile=None) -> np.ndarray:
     """One width-bounded stack-distance counting pass over the whole tape.
 
     ``bounds`` carries the per-tenant segment offsets so both backends can
@@ -184,13 +223,14 @@ def _sd_pass(prev: np.ndarray, nxt_c: np.ndarray, backend: str,
     accel: width-restricted kernel grids) instead of paying the full
     global merge depth; ``layout`` is the tape's precomputed
     ``padded_segment_layout`` (shared with the link construction).
+    ``profile`` records the accel route's per-width-launch host syncs.
     """
     if backend == "auto":
         backend = "accel" if _accel_default() else "host"
     if backend == "accel":
         from repro.kernels.cache_sim.ops import stack_distances_segments_accel
         return stack_distances_segments_accel(prev, nxt_c, bounds=bounds,
-                                              layout=layout)
+                                              layout=layout, profile=profile)
     return _stack_distances_host(prev, nxt_c, bounds=bounds, layout=layout)
 
 
@@ -217,16 +257,28 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
                     sample_target: int = 4096, sample_floor: int = 256,
                     precomputed_trd: list[np.ndarray | None] | None = None,
                     tenant_ids: list[int] | None = None,
-                    backend: str = "auto") -> MonitorResult:
+                    backend: str = "auto", pipeline: str = "host",
+                    profile=None) -> MonitorResult:
     """Analyze every tenant's Δt window in one fused pass (see module doc).
 
-    ``precomputed_trd[i]`` (exact path only) carries tenant i's raw
+    ``precomputed_trd[i]`` (host exact path only) carries tenant i's raw
     window-internal TRD sample array from the batch replay engine; missing
     entries are counted here.  ``tenant_ids`` stabilizes the per-tenant
     SHARDS salts under tenant retirement (defaults to positional ids).
+    ``pipeline="device"`` routes the window through the fused device
+    program (one jit, one host sync — requires ``percentile == 100``);
+    ``profile`` (a ``device_pipeline.StageProfile``) records per-stage
+    times and host syncs on either pipeline.
     """
     if kind not in ("trd", "urd"):
         raise ValueError(f"kind must be 'trd' or 'urd', got {kind!r}")
+    if pipeline not in ("host", "device"):
+        raise ValueError(
+            f"pipeline must be 'host' or 'device', got {pipeline!r}")
+    if pipeline == "device" and percentile < 100.0:
+        raise ValueError("pipeline='device' computes URD sizes from the "
+                         "curve store (percentile=100); use the host "
+                         "pipeline for percentile < 100")
     n = len(traces)
     lens = np.array([len(t) for t in traces], dtype=np.int64)
     bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
@@ -239,6 +291,16 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
         is_read = (np.concatenate([t.is_read for t in traces]) if m
                    else np.zeros(0, bool))
         tid = np.repeat(np.arange(n, dtype=np.int64), lens)
+        if pipeline == "device":
+            # one fused program, one sync; recounts even precomputed
+            # windows (deterministically equal — see module doc)
+            from repro.core.device_pipeline import monitor_window_device
+            addrs = (np.concatenate([t.addrs for t in traces]) if m
+                     else np.zeros(0, np.int64))
+            curves, urd, wr, _ = monitor_window_device(
+                addrs, is_read, bounds, lens, kind=kind, profile=profile)
+            return MonitorResult(curves, urd, wr, np.ones(n),
+                                 np.zeros(n), kind)
         pre = precomputed_trd or []
         dist = np.full(m, -1, dtype=np.int64)
         need = []
@@ -267,18 +329,25 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
             remap = np.zeros(n, dtype=np.int64)
             remap[need] = np.arange(len(need))
             sub_bounds = sub_bounds.astype(np.int64)
-            layout = padded_segment_layout(sub_bounds)
-            prev, nxt_c = _segment_links(sub_addr, remap[sub_tid],
-                                         sub_bounds, layout)
-            dist[sel] = _sd_pass(prev, nxt_c, backend, sub_bounds, layout)
-        hot = dist >= 0
-        wr = (np.bincount(tid[hot & ~is_read], minlength=n)
-              / np.maximum(lens, 1))
-        smask = (hot & is_read) if kind == "urd" else hot
-        if kind == "urd" and percentile < 100.0:
-            dist = np.where(smask, dist, -1)     # rare: per-segment slices
-        curves = build_hit_ratio_functions(dist, tid, n, lens, mask=smask)
-        urd = _urd_sizes(dist, tid, n, bounds, percentile, curves)
+            with _pstage(profile, "links"):
+                layout = padded_segment_layout(sub_bounds)
+                prev, nxt_c = _segment_links(sub_addr, remap[sub_tid],
+                                             sub_bounds, layout)
+            with _pstage(profile, "count"):
+                dist[sel] = _sd_pass(prev, nxt_c, backend, sub_bounds,
+                                     layout, profile=profile)
+        with _pstage(profile, "curve"):
+            hot = dist >= 0
+            wr = (np.bincount(tid[hot & ~is_read], minlength=n)
+                  / np.maximum(lens, 1))
+            smask = (hot & is_read) if kind == "urd" else hot
+            if kind == "urd" and percentile < 100.0:
+                dist = np.where(smask, dist, -1)  # rare: per-segment slices
+            curves = build_hit_ratio_functions(dist, tid, n, lens,
+                                               mask=smask)
+            urd = _urd_sizes(dist, tid, n, bounds, percentile, curves)
+        if profile is not None:
+            profile.windows += 1
         return MonitorResult(curves, urd, wr, np.ones(n),
                              np.zeros(n), kind)
 
@@ -308,21 +377,38 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
         addrs_s = np.zeros(0, np.int64)
         read_s = np.zeros(0, bool)
     tid_s = np.repeat(np.arange(n, dtype=np.int64), kept)
-    layout = padded_segment_layout(sub_bounds)
-    prev, nxt_c = _segment_links(addrs_s, tid_s, sub_bounds, layout)
-    sd = _sd_pass(prev, nxt_c, backend, sub_bounds, layout)
-    rate_s = rates[tid_s]
-    dist = np.where(sd >= 0, np.round(sd / np.maximum(rate_s, 1e-300)
-                                      ).astype(np.int64), -1)
-    hot_w = (dist >= 0) & ~read_s
-    wr = np.bincount(tid_s[hot_w], minlength=n) / np.maximum(kept, 1)
-    if kind == "urd":
-        dist = np.where(read_s, dist, -1)
-    curves = build_hit_ratio_functions(dist, tid_s, n, lens, rates=rates)
-    urd = _urd_sizes(dist, tid_s, n, sub_bounds, percentile, curves)
-    # error bars scale with the kept *distinct* addresses (= cold accesses
-    # of the sub-tape): curve noise is binomial over surviving addresses
-    distinct = np.bincount(tid_s[prev < 0], minlength=n)
+    if pipeline == "device":
+        # the fused program scales distances, builds the HT curves and the
+        # write ratios on device; cold accesses of the kept sub-tape (its
+        # distinct addresses) come back for the error bars
+        from repro.core.device_pipeline import monitor_window_device
+        curves, urd, wr, distinct = monitor_window_device(
+            addrs_s, read_s, sub_bounds, lens, rates=rates, kind=kind,
+            profile=profile)
+    else:
+        with _pstage(profile, "links"):
+            layout = padded_segment_layout(sub_bounds)
+            prev, nxt_c = _segment_links(addrs_s, tid_s, sub_bounds, layout)
+        with _pstage(profile, "count"):
+            sd = _sd_pass(prev, nxt_c, backend, sub_bounds, layout,
+                          profile=profile)
+        with _pstage(profile, "curve"):
+            rate_s = rates[tid_s]
+            dist = np.where(sd >= 0, np.round(sd / np.maximum(rate_s, 1e-300)
+                                              ).astype(np.int64), -1)
+            hot_w = (dist >= 0) & ~read_s
+            wr = np.bincount(tid_s[hot_w], minlength=n) / np.maximum(kept, 1)
+            if kind == "urd":
+                dist = np.where(read_s, dist, -1)
+            curves = build_hit_ratio_functions(dist, tid_s, n, lens,
+                                               rates=rates)
+            urd = _urd_sizes(dist, tid_s, n, sub_bounds, percentile, curves)
+            # error bars scale with the kept *distinct* addresses (= cold
+            # accesses of the sub-tape): curve noise is binomial over
+            # surviving addresses
+            distinct = np.bincount(tid_s[prev < 0], minlength=n)
+        if profile is not None:
+            profile.windows += 1
     errors = np.where(rates < 1.0,
                       np.minimum(1.0,
                                  1.0 / np.sqrt(np.maximum(distinct, 1))),

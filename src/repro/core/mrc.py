@@ -183,6 +183,36 @@ class BatchedHitRatioFunctions:
         return cls(np.concatenate(parts_e), np.concatenate(parts_h), offsets,
                    np.array([h.n_accesses for h in hs], np.int64))
 
+    @classmethod
+    def from_padded(cls, edges_p: np.ndarray, heights_p: np.ndarray,
+                    k: np.ndarray, row_start: np.ndarray,
+                    n_accesses: np.ndarray) -> "BatchedHitRatioFunctions":
+        """Stack curves out of a padded device curve store.
+
+        The fused device window program (``core.device_pipeline``) leaves
+        tenant ``i``'s ``k[i]`` breakpoints at
+        ``edges_p[row_start[i] : row_start[i] + k[i]]`` (matching
+        ``heights_p`` plateaus); this gathers them into the compact
+        stacked layout, prepending each curve's 0-head exactly like
+        ``build_hit_ratio_functions`` — bit-identical when the device
+        program ran in f64.
+        """
+        k = np.asarray(k, np.int64)
+        n = k.shape[0]
+        off = np.concatenate([[0], np.cumsum(k + 1)]).astype(np.int64)
+        edges = np.zeros(int(off[-1]), np.int64)
+        heights = np.zeros(int(off[-1]), np.float64)
+        total = int(k.sum())
+        if total:
+            rank = (np.arange(total, dtype=np.int64)
+                    - np.repeat(np.cumsum(k) - k, k))
+            src = np.repeat(np.asarray(row_start, np.int64), k) + rank
+            dst = np.repeat(off[:-1] + 1, k) + rank
+            edges[dst] = np.asarray(edges_p)[src]
+            heights[dst] = np.asarray(heights_p)[src]
+        return cls(edges, heights, off,
+                   np.maximum(np.asarray(n_accesses, np.int64), 1))
+
     # ------------------------------------------------------------ queries
     @property
     def max_useful_sizes(self) -> np.ndarray:

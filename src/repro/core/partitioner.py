@@ -94,10 +94,14 @@ def greedy_allocate(hs, capacity: int,
     (default) runs the vectorized breakpoint walk, ``"heap"`` the original
     one-pop-at-a-time loop — both produce bit-identical sizes (the heap is
     retained as the oracle in tests and for the partial-grant semantics
-    reference).
+    reference).  ``"device"`` runs the fast walk's jitted ``lax`` port
+    (``core.device_pipeline.greedy_walk_device``) — bit-identical to the
+    host walk in its f64 mode, used standalone here and inlined by the
+    fused device window program.
     """
-    if method not in ("fast", "heap"):
-        raise ValueError(f"method must be 'fast' or 'heap', got {method!r}")
+    if method not in ("fast", "heap", "device"):
+        raise ValueError(
+            f"method must be 'fast', 'heap' or 'device', got {method!r}")
     n = len(hs)
     w = np.ones(n) if weights is None else np.asarray(weights, float)
     b = BatchedHitRatioFunctions.from_curves(hs)
@@ -121,6 +125,9 @@ def greedy_allocate(hs, capacity: int,
     gain = t_slow - t_fast  # latency saved per unit hit-ratio
     if method == "heap":
         sizes = _greedy_walk_heap(hs, sizes, budget, urd_sizes, w, gain)
+    elif method == "device":
+        from repro.core.device_pipeline import greedy_walk_device
+        sizes = greedy_walk_device(b, sizes, budget, w, gain)
     else:
         sizes = _greedy_walk_fast(b, sizes, budget, w, gain)
 

@@ -148,6 +148,15 @@ def cache_sim_segments_scan(prev: jax.Array, nxt: jax.Array, occ: jax.Array,
     ``nt x (seg_width / tile)`` — the j loop visits only the aligned
     block, the kernel body is ``_kernel`` with the absolute j base offset.
     Cold and padding rows return prefix counts — callers mask them.
+
+    This is the TPU counting route of both the per-width host launches
+    (``ops.stack_distances_segments_accel``) and the fused device window
+    program (``ops.segment_counts_device``, inlined into
+    ``core.device_pipeline``'s single-jit window decision — there the
+    call traces into the surrounding program, so no host sync separates
+    it from the curve/write-ratio/partition stages); off TPU the fused
+    program substitutes the O(m log² w) ``cache_sim_segments_tree``
+    oracle instead of this kernel's interpret mode.
     """
     n = prev.shape[0]
     if seg_width < tile:

@@ -41,6 +41,7 @@ except ImportError:  # pragma: no cover
 __all__ = [
     "RESULT_FIELDS",
     "EngineDiff",
+    "assert_monitor_equal",
     "assert_results_equal",
     "assert_states_equal",
     "examples",
@@ -81,6 +82,31 @@ def assert_results_equal(r_ref, r_got, fields=RESULT_FIELDS) -> None:
             (f, getattr(r_ref, f), getattr(r_got, f))
     assert r_got.total_latency == pytest.approx(r_ref.total_latency,
                                                 rel=1e-9, abs=1e-9)
+
+
+def assert_monitor_equal(ref, got, exact_floats: bool = True) -> None:
+    """Bit-equality of two ``MonitorResult``s (host vs device pipeline).
+
+    The device window program's f64 mode reproduces the host monitor
+    bit-for-bit — curve stores included; ``exact_floats=False`` (the TPU
+    f32 tolerance documented in ``core.device_pipeline``) relaxes heights
+    and write ratios to a float tolerance while keeping the integer
+    outputs (edges, offsets, URD sizes) exact.
+    """
+    assert np.array_equal(ref.curves.edges, got.curves.edges)
+    assert np.array_equal(ref.curves.offsets, got.curves.offsets)
+    assert np.array_equal(ref.curves.n_accesses, got.curves.n_accesses)
+    assert np.array_equal(ref.urd_sizes, got.urd_sizes)
+    assert np.array_equal(ref.sample_rates, got.sample_rates)
+    if exact_floats:
+        assert np.array_equal(ref.curves.heights, got.curves.heights)
+        assert np.array_equal(ref.write_ratios, got.write_ratios)
+        assert np.array_equal(ref.expected_errors, got.expected_errors)
+    else:
+        np.testing.assert_allclose(ref.curves.heights, got.curves.heights,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(ref.write_ratios, got.write_ratios,
+                                   rtol=1e-5, atol=1e-6)
 
 
 def assert_states_equal(c_ref, c_got) -> None:

@@ -10,17 +10,21 @@ per tenant, and ``greedy_allocate(method="heap")``).
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
+from oracle import assert_monitor_equal, examples
 
-from repro.core import (ECICacheManager, HitRatioFunction, Trace, WritePolicy,
+from repro.core import (DeviceWindowPipeline, ECICacheManager,
+                        HitRatioFunction, StageProfile, Trace, WritePolicy,
                         aggregate_latency, analyze_windows,
                         build_hit_ratio_function, greedy_allocate,
                         reuse_distances, reuse_distances_fast,
                         sampled_reuse_distances, shards_salt, simulate_many,
                         two_level_solve, urd_cache_blocks)
+from repro.core.device_pipeline import monitor_window_device
 from repro.core.mrc import BatchedHitRatioFunctions
 from repro.core.reuse_distance import auto_sample_rate, shards_keep_mask
 from repro.core.simulator import LRUCache
 from repro.core.write_policy import write_ratio
+from repro.kernels.cache_sim.ops import _on_tpu
 
 
 def _rand_traces(seed, n_tenants=6, max_n=300, max_addr=40):
@@ -287,6 +291,193 @@ def test_manager_sampled_windows_progress_salts():
         mgr.run_window(traces)
     assert mgr.windows_analyzed == 3
     assert len(mgr.history) == 3
+
+
+# --------------------------------------- device pipeline == host pipeline
+def _device_traces(seed):
+    """Adversarial window shapes for the fused device program: empty
+    windows, single-access segments, and pow2-straddling lengths (63/64/65
+    — the padded widths the shape-bucket key must separate)."""
+    rng = np.random.default_rng(seed)
+    out = _rand_traces(seed)
+    out.append(Trace(np.array([7], np.int64), np.array([True]), "one"))
+    out.append(Trace(np.array([7], np.int64), np.array([False]), "one-w"))
+    for ln in (63, 64, 65):
+        a = rng.integers(0, 12, ln).astype(np.int64)
+        out.append(Trace(a, rng.random(ln) < 0.5, f"pow2-{ln}"))
+    return out
+
+
+@pytest.mark.parametrize("kind", ["urd", "trd"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_device_pipeline_bit_identical(kind, seed):
+    """The fused device program reproduces the host monitor bit-for-bit
+    (f64 mode off-TPU), paying exactly one host sync per window."""
+    traces = _device_traces(seed)
+    ref = analyze_windows(traces, kind)
+    prof = StageProfile()
+    got = analyze_windows(traces, kind, pipeline="device", profile=prof)
+    assert_monitor_equal(ref, got, exact_floats=not _on_tpu())
+    assert prof.windows == 1 and prof.syncs_per_window <= 1.0
+
+
+def test_device_pipeline_sampled_bit_identical():
+    traces = _device_traces(7)
+    for rate in (0.5, "auto"):
+        ref = analyze_windows(traces, "urd", sample_rate=rate,
+                              window_seed=11)
+        got = analyze_windows(traces, "urd", sample_rate=rate,
+                              window_seed=11, pipeline="device")
+        assert_monitor_equal(ref, got, exact_floats=not _on_tpu())
+
+
+def test_device_pipeline_all_empty_window():
+    traces = [Trace(np.zeros(0, np.int64), np.zeros(0, bool), f"e{i}")
+              for i in range(3)]
+    ref = analyze_windows(traces, "urd")
+    prof = StageProfile()
+    got = analyze_windows(traces, "urd", pipeline="device", profile=prof)
+    assert_monitor_equal(ref, got)
+    assert prof.syncs == 0               # trivial window: no device work
+
+
+def test_device_pipeline_kernel_route():
+    """The Pallas-kernel counting route of the device program (interpret
+    mode off-TPU) agrees with the host monitor on a small tape."""
+    traces = _device_traces(3)[:4] + [
+        Trace(np.zeros(0, np.int64), np.zeros(0, bool), "empty")]
+    lens = np.array([len(t) for t in traces], np.int64)
+    bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    addrs = np.concatenate([t.addrs for t in traces])
+    is_read = np.concatenate([t.is_read for t in traces])
+    ref = analyze_windows(traces, "urd")
+    curves, urd, wr, _ = monitor_window_device(
+        addrs, is_read, bounds, lens, kind="urd", use_kernel=True)
+    assert np.array_equal(ref.curves.edges, curves.edges)
+    assert np.array_equal(ref.curves.offsets, curves.offsets)
+    assert np.array_equal(ref.urd_sizes, urd)
+    if not _on_tpu():
+        assert np.array_equal(ref.curves.heights, curves.heights)
+        assert np.array_equal(ref.write_ratios, wr)
+
+
+def test_device_pipeline_rejects_percentile():
+    with pytest.raises(ValueError, match="percentile"):
+        analyze_windows(_rand_traces(0), "urd", percentile=90.0,
+                        pipeline="device")
+
+
+@settings(max_examples=40, deadline=None)
+@given(_curve_strategy(), st.integers(0, 120), st.integers(0, 12),
+       st.booleans())
+def test_greedy_device_bit_identical_to_heap(steps_per_tenant, capacity,
+                                             c_min, weighted):
+    """The jitted lax walk replays the heap's grant order exactly."""
+    hs = []
+    for steps in steps_per_tenant:
+        sizes = np.cumsum([s for s, _ in steps])
+        heights = np.minimum(np.cumsum([h for _, h in steps]), 1.0)
+        hs.append(HitRatioFunction(
+            np.concatenate([[0], sizes]).astype(np.int64),
+            np.concatenate([[0.0], heights]), 1000))
+    w = (np.linspace(0.5, 2.0, len(hs)) if weighted else None)
+    heap = greedy_allocate(hs, capacity, 1.0, 20.0, c_min=c_min,
+                           weights=w, method="heap")
+    dev = greedy_allocate(hs, capacity, 1.0, 20.0, c_min=c_min,
+                          weights=w, method="device")
+    if _on_tpu():                        # f32 ties: compare by objective
+        assert dev.latency == pytest.approx(heap.latency, rel=1e-5)
+    else:
+        assert np.array_equal(heap.sizes, dev.sizes)
+        assert np.array_equal(heap.hit_ratios, dev.hit_ratios)
+    assert heap.feasible == dev.feasible
+
+
+@pytest.mark.parametrize("frac", [0.1, 0.6, 2.0])
+def test_device_decision_pipeline_matches_host(frac):
+    """End-to-end fused decision (count→curve→wr→partition in one jit)
+    equals the host monitor + fast walk, including the feasible and
+    scale-down branches."""
+    traces = _device_traces(5)
+    mon = analyze_windows(traces, "urd")
+    cap = max(int(mon.urd_sizes.sum() * frac), 1)
+    pipe = DeviceWindowPipeline(capacity=cap, c_min=4)
+    prof = StageProfile()
+    dec = pipe.run(traces, profile=prof)
+    part = greedy_allocate(mon.curves, cap, 1.0, 20.0, c_min=4,
+                           method="fast")
+    assert dec.feasible == part.feasible
+    assert np.array_equal(dec.urd_sizes, mon.urd_sizes)
+    assert prof.syncs_per_window <= 1.0
+    if _on_tpu():
+        assert dec.latency == pytest.approx(part.latency, rel=1e-3)
+    else:
+        assert np.array_equal(dec.sizes, part.sizes)
+        assert np.array_equal(dec.hit_ratios, part.hit_ratios)
+        assert np.array_equal(dec.write_ratios, mon.write_ratios)
+        assert dec.latency == pytest.approx(part.latency, rel=1e-12)
+
+
+def test_device_run_stream_double_buffered():
+    """The double-buffered stream returns the same per-window decisions
+    as window-at-a-time runs (empty windows interleaved)."""
+    empty = [Trace(np.zeros(0, np.int64), np.zeros(0, bool))] * 3
+    wins = [_device_traces(s) for s in (0, 1)] + [empty] + \
+           [_device_traces(2)]
+    pipe = DeviceWindowPipeline(capacity=300, c_min=3)
+    prof = StageProfile()
+    stream = pipe.run_stream(wins, profile=prof)
+    solo = [pipe.run(w) for w in wins]
+    assert len(stream) == len(wins)
+    for a, b in zip(stream, solo):
+        assert np.array_equal(a.sizes, b.sizes)
+        assert np.array_equal(a.urd_sizes, b.urd_sizes)
+        assert a.feasible == b.feasible
+    assert prof.syncs_per_window <= 1.0
+
+
+def test_manager_device_pipeline_matches_host():
+    """ECICacheManager(pipeline="device") reproduces the host manager's
+    decisions window for window (batch engine + precomputed TRD on the
+    host side vs device recount)."""
+    def drive(pipeline):
+        mgr = ECICacheManager(600, [f"t{i}" for i in range(5)], c_min=8,
+                              pipeline=pipeline)
+        rng = np.random.default_rng(17)
+        for _ in range(3):
+            traces = []
+            for i in range(5):
+                n = int(rng.integers(20, 250))
+                traces.append(Trace(rng.integers(0, 50, n).astype(np.int64),
+                                    rng.random(n) < 0.6, f"t{i}"))
+            mgr.run_window(traces)
+        return mgr
+    mh, md = drive("host"), drive("device")
+    for a, b in zip(mh.history, md.history):
+        assert a.policies == b.policies
+        if _on_tpu():
+            assert a.partition.latency == pytest.approx(
+                b.partition.latency, rel=1e-3)
+        else:
+            assert np.array_equal(a.sizes, b.sizes)
+
+
+@pytest.mark.slow
+@settings(max_examples=examples(10), deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from([None, 0.4]),
+       st.sampled_from(["urd", "trd"]))
+def test_device_pipeline_differential_deep(seed, rate, kind):
+    """Nightly depth: randomized window shapes through both pipelines."""
+    rng = np.random.default_rng(seed)
+    traces = []
+    for i in range(int(rng.integers(1, 10))):
+        n = int(rng.integers(0, 200))
+        traces.append(Trace(rng.integers(0, 30, n).astype(np.int64),
+                            rng.random(n) < rng.uniform(0, 1), f"t{i}"))
+    ref = analyze_windows(traces, kind, sample_rate=rate, window_seed=seed)
+    got = analyze_windows(traces, kind, sample_rate=rate, window_seed=seed,
+                          pipeline="device")
+    assert_monitor_equal(ref, got, exact_floats=not _on_tpu())
 
 
 # --------------------------------------------------- fallback telemetry
