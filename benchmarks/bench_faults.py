@@ -1,0 +1,205 @@
+"""Chaos benchmark — the degradation ladder under scheduled faults.
+
+Three gated experiments over the fault-injection harness
+(``repro.core.faults``), each replayed on a deterministic workload so the
+run is bit-reproducible:
+
+  * **Fault scenarios** — every labeled ``FAULT_SCENARIOS`` case
+    (tier loss mid-phase, straggler burst during a correlated reconfig,
+    a poisoned tenant joining) replays through a fault-tolerant ECI
+    manager.  Gates: zero guard-violating decisions actuated anywhere,
+    and each scenario leaves its expected fingerprint (dirty loss /
+    straggler holds / poisoned-window quarantines).
+
+  * **Reconvergence** — ``FaultPlan.standard`` (one of everything: trace
+    poison, launch retries, a forced rung step-down, an L1 loss, a NaN
+    curve, a truncated tape) against the identical no-fault run.  The
+    faulted manager must issue decisions identical to the fault-free one
+    within ``K = reconverge_bound(demote_cooldown) = demote_cooldown + 2``
+    windows of the last fault clearing, and dirty loss must be positive
+    (the crash really hit WB state) yet bounded by the L1 capacity.
+
+  * **Default-off identity** — a manager carrying a *disabled* plan is
+    bit-identical (summary, sizes, policies, per-window decisions) to one
+    with no plan: the harness costs nothing when off.
+
+``--smoke`` (the CI step) runs one seed; the full run sweeps ``N_SEEDS``.
+The nightly job re-runs the hypothesis chaos suite at 10x depth via
+``HYP_EXAMPLES_SCALE=10`` (see ``tests/test_faults.py``); this benchmark
+gates the deterministic half.  Results land in ``BENCH_faults.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.core import ECICacheManager, FaultPlan, Trace
+from repro.data.scenarios import FAULT_SCENARIOS, replay_scenario
+
+from benchmarks.common import DEFAULT_SIM, emit
+
+CAPACITY = 8192
+C_MIN = 256
+DEMOTE_COOLDOWN = 2
+N_SEEDS = 3
+N_TENANTS = 4          # reconvergence experiment fleet
+N_WINDOWS_MIN = 8      # FaultPlan.standard needs >= 8
+
+
+def _mgr(names, faults=None, **kw):
+    return ECICacheManager(CAPACITY, list(names), c_min=C_MIN,
+                           initial_blocks=C_MIN, faults=faults,
+                           demote_cooldown=DEMOTE_COOLDOWN,
+                           **DEFAULT_SIM, **kw)
+
+
+def _trace(seed: int, window: int, tenant: int, n: int = 2500) -> Trace:
+    rng = np.random.default_rng(
+        (seed * 1_000_003 + window * 8_191 + tenant * 131) & 0x7FFFFFFF)
+    return Trace(rng.integers(0, 2048, n), rng.random(n) < 0.55,
+                 f"t{tenant}")
+
+
+def _decisions_equal(da, db) -> bool:
+    return (np.array_equal(da.sizes, db.sizes) and da.policies == db.policies
+            and np.array_equal(da.sizes2, db.sizes2))
+
+
+# -------------------------------------------------------- fault scenarios
+EXPECTED_FINGERPRINT = {
+    # scenario -> summary counter that must be > 0 after the replay
+    "faulted_tier_loss": "dirty_loss",
+    "faulted_straggler_burst": "straggler_windows",
+    "faulted_poisoned_join": "poisoned_windows",
+}
+
+
+def run_fault_scenarios(seeds) -> dict:
+    rows = []
+    for name, build in FAULT_SCENARIOS.items():
+        for seed in seeds:
+            fs = build(seed=seed)
+
+            def factory(names, plan=fs.plan):
+                return _mgr(names, faults=plan)
+
+            mgr, _ = replay_scenario(fs.run, factory)
+            s = mgr.summary()
+            rows.append({
+                "scenario": name, "seed": seed,
+                "guard_violations_actuated": s["guard_violations_actuated"],
+                "degrade_events": s["degrade_events"],
+                "fingerprint": EXPECTED_FINGERPRINT[name],
+                "fingerprint_value": s[EXPECTED_FINGERPRINT[name]],
+                "dirty_loss": s["dirty_loss"],
+                "lkg_decisions": s["lkg_decisions"],
+            })
+        vals = [r for r in rows if r["scenario"] == name]
+        emit(f"faults_scenario_{name}", 0.0,
+             f"actuated={sum(r['guard_violations_actuated'] for r in vals)}"
+             f"_events={sum(r['degrade_events'] for r in vals)}")
+    return {
+        "rows": rows,
+        "actuated_total": sum(r["guard_violations_actuated"] for r in rows),
+        "fingerprints_present": all(r["fingerprint_value"] > 0
+                                    for r in rows),
+    }
+
+
+# --------------------------------------------------------- reconvergence
+def reconvergence_case(seed: int) -> dict:
+    plan = FaultPlan.standard(N_TENANTS, N_WINDOWS_MIN, seed=seed)
+    k = plan.reconverge_bound(DEMOTE_COOLDOWN)
+    last = plan.last_fault_window()
+    n_windows = last + k + 2                  # room to observe convergence
+    names = [f"t{i}" for i in range(N_TENANTS)]
+    base = _mgr(names)
+    faulted = _mgr(names, faults=plan)
+    for mgr in (base, faulted):
+        for w in range(n_windows):
+            mgr.run_window([_trace(seed, w, t) for t in range(N_TENANTS)])
+    # recovery = first window from which every later decision matches
+    recovered_at = n_windows
+    for w in range(n_windows - 1, -1, -1):
+        if not _decisions_equal(base.history[w], faulted.history[w]):
+            break
+        recovered_at = w
+    s = faulted.summary()
+    return {
+        "seed": seed, "last_fault_window": last, "k": k,
+        "recovered_at": recovered_at,
+        "recovery_windows": max(recovered_at - last, 0),
+        "dirty_loss": s["dirty_loss"],
+        "guard_violations_actuated": s["guard_violations_actuated"],
+        "degrade_events": s["degrade_events"],
+    }
+
+
+def run_reconvergence(seeds) -> dict:
+    rows = [reconvergence_case(seed) for seed in seeds]
+    worst = max(r["recovery_windows"] for r in rows)
+    emit("faults_reconvergence", 0.0,
+         f"worst_recovery={worst}_k={rows[0]['k']}")
+    return {
+        "rows": rows,
+        "worst_recovery_windows": worst,
+        "k": rows[0]["k"],
+        "dirty_loss_min": min(r["dirty_loss"] for r in rows),
+        "dirty_loss_max": max(r["dirty_loss"] for r in rows),
+        "actuated_total": sum(r["guard_violations_actuated"] for r in rows),
+    }
+
+
+# ---------------------------------------------------- default-off identity
+def run_disabled_identity(seed: int) -> dict:
+    names = [f"t{i}" for i in range(N_TENANTS)]
+    plain = _mgr(names)
+    disabled = _mgr(names, faults=FaultPlan((), seed=seed))
+    for mgr in (plain, disabled):
+        for w in range(N_WINDOWS_MIN):
+            mgr.run_window([_trace(seed, w, t) for t in range(N_TENANTS)])
+    sa, sb = plain.summary(), disabled.summary()
+    identical = (set(sa) == set(sb)
+                 and all(np.array_equal(sa[k], sb[k]) for k in sa)
+                 and all(_decisions_equal(da, db) for da, db
+                         in zip(plain.history, disabled.history)))
+    emit("faults_disabled_identity", 0.0, identical)
+    return {"identical": identical, "seed": seed}
+
+
+def main(smoke: bool = False) -> dict:
+    seeds = (0,) if smoke else tuple(range(N_SEEDS))
+    scen = run_fault_scenarios(seeds)
+    recon = run_reconvergence(seeds)
+    ident = run_disabled_identity(seeds[0])
+    checks = {
+        "no_guard_violations_actuated":
+            scen["actuated_total"] == 0 and recon["actuated_total"] == 0,
+        "scenario_fingerprints_present": scen["fingerprints_present"],
+        "dirty_loss_positive_and_bounded":
+            0 < recon["dirty_loss_min"]
+            and recon["dirty_loss_max"] <= CAPACITY,
+        "recovery_within_k":
+            recon["worst_recovery_windows"] <= recon["k"],
+        "disabled_plan_bit_identical": ident["identical"],
+    }
+    out = {"scenarios": scen, "reconvergence": recon, "identity": ident,
+           "checks": checks, "seeds": list(seeds),
+           "demote_cooldown": DEMOTE_COOLDOWN}
+    with open("BENCH_faults.json", "w") as f:
+        json.dump(out, f, indent=2)
+    for k, v in checks.items():
+        emit(f"faults_check_{k}", 0.0, v)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI configuration: one seed")
+    args = ap.parse_args()
+    result = main(smoke=args.smoke)
+    if not all(result["checks"].values()):
+        raise SystemExit(f"CHECK FAILED: {result['checks']}")

@@ -13,7 +13,8 @@ import traceback
 
 from benchmarks import common
 from benchmarks import (bench_appendixA_feasible, bench_etica_two_level,
-                        bench_fig04_write_policy, bench_fig10_allocation,
+                        bench_faults, bench_fig04_write_policy,
+                        bench_fig10_allocation,
                         bench_fig12_policy_assignment,
                         bench_fig14_perf_per_cost, bench_fig16_endurance,
                         bench_monitor_scale, bench_scenarios,
@@ -31,6 +32,7 @@ BENCHES = [
     ("serving_cache", bench_serving_cache),
     ("monitor_scale", bench_monitor_scale),
     ("scenarios", bench_scenarios),
+    ("faults", bench_faults),
 ]
 
 

@@ -14,8 +14,11 @@ from repro.core.characterize import (PhaseDetector, PhaseEvent,
 from repro.core.device_pipeline import (DeviceWindowPipeline, StageProfile,
                                         WindowDecision, greedy_walk_device,
                                         monitor_window_device)
-from repro.core.manager import (AnalyzerDecision, ECICacheManager,
-                                ReconfigEvent, TenantState)
+from repro.core.faults import (FAULT_KINDS, FaultPlan, FaultSpec,
+                               InjectedFault)
+from repro.core.guard import GuardReport, validate_decision
+from repro.core.manager import (AnalyzerDecision, DegradeEvent,
+                                ECICacheManager, ReconfigEvent, TenantState)
 from repro.core.monitor import MonitorResult, analyze_windows
 from repro.core.mrc import (BatchedHitRatioFunctions, HitRatioFunction,
                             build_hit_ratio_function,
@@ -30,17 +33,21 @@ from repro.core.reuse_distance import (RDResult, auto_sample_rate, max_rd,
                                        urd_cache_blocks)
 from repro.core.simulator import (LRUCache, SimResult, rebalance_levels,
                                   simulate)
-from repro.core.trace import (AccessClass, Trace, classify_accesses,
-                              request_type_mix, total_cache_writes_wb)
+from repro.core.trace import (AccessClass, Trace, TraceError,
+                              classify_accesses, request_type_mix,
+                              total_cache_writes_wb, validate_trace,
+                              validate_trace_arrays)
 from repro.core.write_policy import (WritePolicy, assign_write_policy,
                                      assign_write_policy_levels, write_ratio)
 
 __all__ = [
     "AccessClass", "AnalyzerDecision", "BatchedHitRatioFunctions",
-    "DeviceWindowPipeline", "ECICacheManager", "GlobalLRUManager",
-    "HitRatioFunction", "LRUCache", "MonitorResult", "PartitionResult",
+    "DegradeEvent", "DeviceWindowPipeline", "ECICacheManager",
+    "FAULT_KINDS", "FaultPlan", "FaultSpec", "GlobalLRUManager",
+    "GuardReport", "HitRatioFunction", "InjectedFault", "LRUCache",
+    "MonitorResult", "PartitionResult",
     "PhaseDetector", "PhaseEvent", "RDResult", "ReconfigEvent", "SimResult",
-    "StageProfile", "TenantState", "Trace", "WindowDecision",
+    "StageProfile", "TenantState", "Trace", "TraceError", "WindowDecision",
     "WindowFeatures", "WritePolicy",
     "aggregate_latency",
     "analyze_windows", "assign_write_policy", "assign_write_policy_levels",
@@ -55,5 +62,6 @@ __all__ = [
     "sampled_reuse_distances", "shards_salt",
     "simulate", "simulate_batch", "simulate_many", "stack_distances",
     "total_cache_writes_wb", "two_level_solve", "urd_cache_blocks",
+    "validate_decision", "validate_trace", "validate_trace_arrays",
     "write_ratio",
 ]

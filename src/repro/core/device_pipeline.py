@@ -472,12 +472,15 @@ def monitor_window_device(addrs: np.ndarray, is_read: np.ndarray,
                           kind: str = "urd",
                           use_kernel: bool | None = None,
                           f64: bool | None = None,
-                          profile: StageProfile | None = None):
+                          profile: StageProfile | None = None,
+                          launch_hook=None):
     """Monitor outputs for one window, computed on device.
 
     Returns ``(curves, urd_sizes, write_ratios, cold_counts)`` —
     ``analyze_windows(pipeline="device")``'s backend.  One host sync (the
-    fetch); bit-identical to the host monitor in f64 mode.
+    fetch); bit-identical to the host monitor in f64 mode.  ``launch_hook``
+    (fault injection) is invoked right before the fused program dispatch —
+    after ingest, at the real launch boundary.
     """
     n = int(np.asarray(bounds).shape[0]) - 1
     n_acc = np.maximum(np.asarray(n_accesses, np.int64), 1)
@@ -486,6 +489,8 @@ def monitor_window_device(addrs: np.ndarray, is_read: np.ndarray,
                         profile=profile)
     if profile is not None:
         profile.windows += 1
+    if launch_hook is not None:
+        launch_hook()
     if ing is None:
         return _trivial_monitor(n, n_acc)
     out = _dispatch_monitor(ing, profile)

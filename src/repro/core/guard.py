@@ -1,0 +1,116 @@
+"""Decision guard: hard invariants every ``AnalyzerDecision`` must satisfy.
+
+The Analyzer's outputs drive real resizes and policy flips; a corrupted
+monitor pass (NaN curves, a poisoned tape that slipped through, a solver
+returning garbage) must never be *actuated*.  ``validate_decision`` checks
+the invariants below and returns a ``GuardReport``; a fault-tolerant
+``ECICacheManager`` quarantines any violating decision (re-applying the
+last-known-good allocation) instead of actuating it, and a fault-intolerant
+one counts the violation (``guard_violations_actuated``) so silent garbage
+still shows up in ``summary()``.
+
+Invariants (tentpole spec):
+
+  * every L1 size is finite and >= 0, and Σ sizes  <= capacity;
+  * every L2 size is finite and >= 0, and Σ sizes2 <= capacity2
+    (checked only when a second level exists);
+  * per-tenant ``c_min`` floors hold — ``floors[i] = min(c_min, urd_i)``,
+    checked only when the floors themselves fit the partitioned budget
+    (``floor_budget``): under scale-down (minimums do not fit) or a tier
+    outage the floors are definitionally unsatisfiable and are skipped;
+  * the partition objective (Eq. 2 latency) and hit ratios are finite,
+    hit ratios within [0, 1];
+  * every policy is a ``WritePolicy`` member (WB/WT/RO).
+
+The guard is pure and cheap (a handful of vector reductions); the manager
+runs it on *every* analyze, fault-tolerant or not.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.write_policy import WritePolicy
+
+__all__ = ["GuardReport", "validate_decision"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardReport:
+    """Outcome of one decision validation: empty ``violations`` = pass."""
+
+    violations: tuple[str, ...] = ()
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+
+def _check_level(v: list[str], sizes, capacity: int, tag: str) -> None:
+    fs = np.asarray(sizes, dtype=np.float64)
+    if fs.size == 0:
+        return
+    if not np.all(np.isfinite(fs)):
+        v.append(f"non-finite {tag} size")
+        return
+    if float(fs.min()) < 0:
+        v.append(f"negative {tag} size")
+    if float(fs.sum()) > capacity + 0.5:
+        v.append(f"{tag} sizes exceed capacity "
+                 f"({int(fs.sum())} > {int(capacity)})")
+
+
+def _check_policies(v: list[str], policies, tag: str) -> None:
+    if policies is None:
+        return
+    for p in policies:
+        if not isinstance(p, WritePolicy):
+            v.append(f"invalid {tag} policy {p!r}")
+            return
+
+
+def validate_decision(decision, capacity: int, capacity2: int = 0,
+                      floors: np.ndarray | None = None,
+                      floor_budget: int | None = None) -> GuardReport:
+    """Validate one ``AnalyzerDecision`` against the hard invariants.
+
+    ``floors`` (optional, aligned with ``decision.sizes``) carries the
+    per-tenant minimums ``min(c_min, urd_i)`` — zero for tenants the floor
+    does not apply to (inactive, held, not analyzed).  ``floor_budget`` is
+    the capacity the partitioner actually had (defaults to ``capacity``);
+    floors are only enforced when they fit it.
+    """
+    v: list[str] = []
+    _check_level(v, decision.sizes, int(capacity), "L1")
+    if capacity2 > 0 and decision.sizes2 is not None:
+        _check_level(v, decision.sizes2, int(capacity2), "L2")
+    _check_policies(v, decision.policies, "L1")
+    if capacity2 > 0:
+        _check_policies(v, decision.policies2, "L2")
+
+    part = decision.partition
+    if part is not None:
+        if not np.isfinite(float(part.latency)):
+            v.append("non-finite partition latency")
+        hr = np.asarray(part.hit_ratios, dtype=np.float64)
+        if hr.size and not np.all(np.isfinite(hr)):
+            v.append("non-finite hit ratios")
+        elif hr.size and (float(hr.min()) < -1e-9
+                          or float(hr.max()) > 1.0 + 1e-9):
+            v.append("hit ratios outside [0, 1]")
+
+    if floors is not None and not v:
+        fl = np.asarray(floors, dtype=np.float64)
+        budget = int(capacity if floor_budget is None else floor_budget)
+        if fl.size and float(fl.min()) < 0:
+            # floors derive from min(c_min, urd_i): a negative floor means
+            # the monitor reported a negative URD size — corrupt output
+            v.append("negative c_min floor (corrupt URD size)")
+        elif float(fl.sum()) <= budget:
+            fs = np.asarray(decision.sizes, dtype=np.float64)
+            short = np.flatnonzero(fs < fl - 0.5)
+            if short.size:
+                v.append(f"c_min floor violated for tenants "
+                         f"{short.tolist()}")
+    return GuardReport(tuple(v))

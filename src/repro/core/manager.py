@@ -14,27 +14,82 @@
 
 The same class drives both the trace-replay benchmarks and the live paged-KV
 serving engine (see ``repro.cache.tiered`` which feeds events back here).
+
+Failure domains & the graceful-degradation ladder
+-------------------------------------------------
+With a ``FaultPlan`` attached (``faults=``) — or ``fault_tolerant=True`` —
+the manager survives control-plane and tier failures instead of crashing or
+actuating garbage.  Everything below is **default-off and bit-identical
+when off** (the checked-in goldens enforce this):
+
+  * **Monitor ladder.**  Each analyze walks the rungs
+    ``device → fused host → per-tenant`` : the configured pipeline runs
+    first with up to ``retry_limit`` retries per rung (exponential backoff
+    ``backoff_base * 2**attempt`` seconds, 0 = no sleep), a failed device
+    rung steps down to the fused host pass (``device_stepdowns``), a failed
+    host rung to per-tenant solo passes (``host_stepdowns``) where a single
+    poisoned tenant can no longer take the whole deployment's analyze down
+    (failed solo tenants are individually quarantined at their
+    last-known-good size/policy).  If every rung fails, the manager
+    re-applies the **last-known-good decision** (``lkg_decisions``).
+  * **Decision guard.**  Every decision — degraded or not — is validated
+    against ``repro.core.guard`` hard invariants (Σsizes ≤ capacity, c_min
+    floors, finite curves/latency, policies ∈ {WB, WT, RO}).  A tolerant
+    manager retries a *sampled* analyze once exactly
+    (``sampled_exact_retries``) and otherwise quarantines the decision
+    (``guard_quarantines``) behind the last-known-good allocation; an
+    intolerant manager counts it (``guard_violations_actuated``) so silent
+    garbage still surfaces in ``summary()``.
+  * **Ingest validation.**  Malformed tapes raise ``TraceError`` with
+    (tenant, window) coordinates; a tolerant ``run_window`` quarantines the
+    offending tenant-window (empty tape, held at last-known-good —
+    ``poisoned_windows``) instead of raising.  Straggler tapes
+    (``FaultPlan`` ``"straggler"``) hold the tenant out of this window's
+    analyze and fold the deferred tape into the next one
+    (``straggler_windows``).
+  * **Tier loss + write-policy demotion (the paper-faithful part).**
+    ``fail_tier(level)`` / ``note_tier_loss`` drop the level's residents —
+    lost dirty blocks are counted in ``dirty_loss`` (the reliability cost
+    the paper's Alg. 3 restricts WB to bound) — and every WB tenant on the
+    failed level is demoted to ``demote_policy`` (default WT: hits without
+    dirty-loss exposure) for the outage **plus ``demote_cooldown`` analyzes
+    after recovery**, after which Alg. 3 reassigns policies normally.
+    While a level is down its partition budget is 0 and the partitioner
+    degrades to ``greedy_allocate`` (the box-projected PGD solver cannot
+    express an empty budget).  Reconvergence: decisions depend only on the
+    current window's tape and the restored capacities, so a recovered
+    manager matches the no-fault run within
+    ``K = demote_cooldown + 2`` windows of the last fault — gated in
+    ``benchmarks/bench_faults.py`` and the chaos suite.
+
+Every degradation is recorded as a ``DegradeEvent`` in the shared
+``events`` deque (alongside ``ReconfigEvent``) and counted once in
+``summary()``.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable
 
 import numpy as np
 
 from repro.core.batch_sim import simulate_many
 from repro.core.characterize import PhaseDetector, characterize_windows
-from repro.core.monitor import analyze_windows
+from repro.core.faults import FaultPlan, InjectedFault
+from repro.core.guard import validate_decision
+from repro.core.monitor import MonitorResult, analyze_windows
 from repro.core.mrc import HitRatioFunction
-from repro.core.partitioner import (PartitionResult, pgd_solve,
-                                    two_level_solve)
+from repro.core.partitioner import (PartitionResult, greedy_allocate,
+                                    pgd_solve, two_level_solve)
 from repro.core.simulator import LRUCache, SimResult, simulate
-from repro.core.trace import Trace
+from repro.core.trace import (Trace, TraceError, validate_trace,
+                              validate_trace_arrays)
 from repro.core.write_policy import WritePolicy
 
 __all__ = ["TenantState", "AnalyzerDecision", "ReconfigEvent",
-           "ECICacheManager"]
+           "DegradeEvent", "ECICacheManager"]
 
 
 @dataclasses.dataclass
@@ -81,6 +136,28 @@ class ReconfigEvent:
 
 
 @dataclasses.dataclass(frozen=True)
+class DegradeEvent:
+    """One graceful-degradation action (fault-tolerance telemetry).
+
+    Lives in the same ``events`` deque as ``ReconfigEvent`` (same
+    ``window``/``tenant``/``reason`` consumer contract).  reason:
+    "tier_loss" / "tier_recover" (``level``, ``blocks`` = lost dirty
+    blocks), "stepdown" (``rung`` = the rung that failed), "straggler",
+    "poisoned" (quarantined tenant-window), "tenant_quarantine" (solo
+    analyze failed), "guard_quarantine", "monitor_outage" (all rungs
+    failed → last-known-good).  ``tenant`` is -1 for deployment-wide
+    events.
+    """
+
+    window: int
+    tenant: int
+    reason: str
+    level: int = 0
+    blocks: int = 0
+    rung: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
 class AnalyzerDecision:
     sizes: np.ndarray
     policies: list[WritePolicy]
@@ -92,6 +169,19 @@ class AnalyzerDecision:
     partition2: PartitionResult | None = None
     # event-driven mode: what triggered this analyze (empty on fixed-Δt)
     trigger: tuple[ReconfigEvent, ...] = ()
+    # fault tolerance (all defaults on the healthy path): ``quarantined``
+    # marks a last-known-good fallback (sizes are the *current*
+    # allocations, not a fresh solve), ``guard`` the guard violations that
+    # were detected (non-empty + not quarantined = actuated violation,
+    # intolerant managers only), ``degraded`` the degradation reason,
+    # ``held`` tenants excluded from this analyze (kept at current
+    # size/policy), ``deferred`` tenants whose window tape the Actuator
+    # must NOT clear (stragglers: it joins the next analyze).
+    quarantined: bool = False
+    guard: tuple[str, ...] = ()
+    degraded: str = ""
+    held: tuple[int, ...] = ()
+    deferred: tuple[int, ...] = ()
 
 
 class ECICacheManager:
@@ -157,6 +247,19 @@ class ECICacheManager:
     ``history_limit``) and on the resulting decision's ``trigger`` field.
     ``phase_hi``/``phase_lo``/``phase_ema`` parameterize the detector's
     hysteresis thresholds and baseline EMA.
+
+    ``faults``/``fault_tolerant`` arm the graceful-degradation machinery
+    (default off, bit-identical when off — see the module docstring for
+    the full failure-domain model).  Ladder order is
+    ``device → fused host → per-tenant``; each non-terminal rung gets
+    ``retry_limit`` retries with ``backoff_base * 2**attempt`` seconds of
+    backoff (0 = no sleep, capped at 1 s).  On a tier loss every WB tenant
+    of that level demotes to ``demote_policy`` (default WT) for the outage
+    plus ``demote_cooldown`` further analyzes after recovery — the paper's
+    reliability rationale: WB buffers dirty data that a cache-device crash
+    loses (counted in ``dirty_loss``), so a tier with a fresh failure
+    history must serve writes through a clean policy until trust is
+    re-established.
     """
 
     def __init__(self, capacity: int, tenant_names: list[str],
@@ -176,7 +279,12 @@ class ECICacheManager:
                  auto_sample_tenants: int = 256,
                  phase_detect: bool = False, reconfig_interval: int = 1,
                  phase_hi: float = 0.25, phase_lo: float = 0.10,
-                 phase_ema: float = 0.5, pipeline: str = "host"):
+                 phase_ema: float = 0.5, pipeline: str = "host",
+                 faults: FaultPlan | None = None,
+                 fault_tolerant: bool | None = None,
+                 retry_limit: int = 2, backoff_base: float = 0.0,
+                 demote_cooldown: int = 2,
+                 demote_policy: WritePolicy | str = WritePolicy.WT):
         if engine not in ("batch", "lru"):
             raise ValueError(f"engine must be 'batch' or 'lru', got {engine!r}")
         if pipeline not in ("host", "device"):
@@ -230,9 +338,53 @@ class ECICacheManager:
         # windows (empty two-level windows / warm L2 behind a dead level);
         # CI asserts it stays 0 on the standard two-level bench mixes
         self.ro_fallback_windows = 0
+        # ---------------- fault tolerance (see the module docstring) ------
+        # ``faults`` injects; ``fault_tolerant`` arms the ladder/guard/
+        # quarantine machinery (defaults on exactly when a plan is
+        # attached).  With both off every path above is bit-identical to
+        # the pre-fault-tolerance manager.
+        self.faults = faults
+        self.fault_tolerant = (faults is not None if fault_tolerant is None
+                               else bool(fault_tolerant))
+        self.retry_limit = max(int(retry_limit), 0)
+        self.backoff_base = float(backoff_base)
+        self.demote_cooldown = max(int(demote_cooldown), 0)
+        self.demote_policy = (WritePolicy(demote_policy)
+                              if isinstance(demote_policy, str)
+                              else demote_policy)
+        self._down_levels: set[int] = set()       # levels currently failed
+        self._tier_restore_at: dict[int, int] = {}  # level -> restore window
+        # (tenant, level) -> analyze-count when the demotion expires
+        # (None = still down: expiry is stamped at recovery)
+        self._demoted_until: dict[tuple[int, int], int | None] = {}
+        self._held: set[int] = set()              # held out of this analyze
+        self._defer_clear: set[int] = set()       # straggler tapes to keep
+        self._cur_window = 0                      # window under analysis
+        self._accumulated: set[int] = set()       # multi-window tapes
+        self._lkg: AnalyzerDecision | None = None
+        # unified degrade counters (each increments exactly once per event;
+        # surfaced in summary())
+        self.dirty_loss = 0
+        self.tier_failures = 0
+        self.guard_quarantines = 0
+        self.guard_violations_observed = 0
+        self.guard_violations_actuated = 0
+        self.device_stepdowns = 0
+        self.host_stepdowns = 0
+        self.tenant_quarantines = 0
+        self.lkg_decisions = 0
+        self.sampled_exact_retries = 0
+        self.poisoned_windows = 0
+        self.straggler_windows = 0
+        self.degrade_events = 0
 
     # ------------------------------------------------------------- Monitor
     def record(self, tenant: int, addrs: np.ndarray, is_read: np.ndarray) -> None:
+        """Ingest one tenant's window events (validated: raises
+        ``TraceError`` with (tenant, window) coordinates on a malformed
+        tape — a tolerant ``run_window`` quarantines instead)."""
+        validate_trace_arrays(addrs, is_read, tenant=tenant,
+                              window=self.windows_run)
         t = self.tenants[tenant]
         t.window_addrs.append(np.asarray(addrs, np.int64))
         t.window_reads.append(np.asarray(is_read, bool))
@@ -272,35 +424,163 @@ class ECICacheManager:
             return "auto"
         return self.sample_rate
 
-    def analyze(self, window_trd: dict[int, np.ndarray] | None = None,
-                trigger: tuple[ReconfigEvent, ...] = ()
-                ) -> AnalyzerDecision:
-        """Alg. 1 / Alg. 4: run at every Δt window boundary.
+    def _record_degrade(self, ev: DegradeEvent) -> None:
+        self.events.append(ev)
+        self.degrade_events += 1
 
-        All active tenants are analyzed in one fused pass
-        (``analyze_windows``): one stack-distance counting pass over the
-        concatenated window tape, batched curve construction, batched
-        Alg.-3 write ratios — optionally SHARDS-sampled (see the class
-        docstring).  ``window_trd`` optionally carries per-tenant raw TRD
-        sample arrays already computed by the batch engine's counting pass
-        (identical to ``reuse_distances(trace, "trd").distances``); the
-        exact path reuses them instead of re-counting.
-        """
-        window_trd = window_trd or {}
-        act = [i for i, t in enumerate(self.tenants) if t.active]
-        traces = [self.tenants[i].window_trace() for i in act]
+    def _launch_hook(self, win: int, rung: str, attempt: int):
+        """Fault-injection hook for one monitor launch (None = no plan)."""
+        if self.faults is None or not self.faults.enabled:
+            return None
+
+        def hook() -> None:
+            if self.faults.launch_should_fail(win, rung, attempt):
+                raise InjectedFault(
+                    f"injected {rung} launch failure "
+                    f"(window={win}, attempt={attempt})")
+        return hook
+
+    def _monitor_kwargs(self, act: list[int]) -> dict:
+        return dict(kind=self.rd_kind, percentile=self.percentile,
+                    sample_rate=self.effective_sample_rate(),
+                    window_seed=self.windows_analyzed,
+                    sample_target=self.sample_target,
+                    sample_floor=self.sample_floor, tenant_ids=act)
+
+    def _per_tenant_monitor(self, act: list[int], traces: list[Trace],
+                            kw: dict, win: int
+                            ) -> tuple[MonitorResult, list[int]]:
+        """Bottom ladder rung: solo analyze per tenant, so one bad tenant
+        can no longer take the whole deployment's analyze down.  Failed
+        tenants are quarantined (held at last-known-good)."""
+        curves, urds, wrs, rates, errs, ok = [], [], [], [], [], []
+        for trace, i in zip(traces, act):
+            try:
+                m = analyze_windows([trace], **{**kw, "tenant_ids": [i]},
+                                    pipeline="host",
+                                    fault_hook=self._launch_hook(
+                                        win, "tenant", 0))
+            except Exception:
+                self._held.add(i)
+                self.tenant_quarantines += 1
+                self._record_degrade(
+                    DegradeEvent(win, i, "tenant_quarantine"))
+                continue
+            ok.append(i)
+            curves.append(m.curves[0])
+            urds.append(int(m.urd_sizes[0]))
+            wrs.append(float(m.write_ratios[0]))
+            rates.append(float(m.sample_rates[0]))
+            errs.append(float(m.expected_errors[0]))
+        mon = MonitorResult(curves, np.asarray(urds, np.int64),
+                            np.asarray(wrs, np.float64),
+                            np.asarray(rates, np.float64),
+                            np.asarray(errs, np.float64), self.rd_kind)
+        return mon, ok
+
+    def _monitor_ladder(self, act: list[int],
+                        window_trd: dict[int, np.ndarray]
+                        ) -> tuple[MonitorResult | None, list[int], str]:
+        """Run the monitor pass down the degradation ladder.
+
+        Returns ``(result, analyzed_tenants, rung)``; ``result`` is None
+        only when every rung failed (total outage → last-known-good).
+        Without fault tolerance this is exactly the single fused call."""
         rate = self.effective_sample_rate()
         pipe = (self.pipeline if self.percentile >= 100.0 else "host")
+        traces = [self.tenants[i].window_trace() for i in act]
         # the device program recounts on device, so precomputed TRD arrays
-        # are only forwarded to the host pipeline
-        pre = ([window_trd.get(i) for i in act]
+        # are only forwarded to the host pipeline; a deferred (straggler)
+        # tape spans multiple windows, invalidating its single-window
+        # precomputed distances
+        pre = ([None if i in self._accumulated else window_trd.get(i)
+                for i in act]
                if rate is None and pipe == "host" else None)
-        mon = analyze_windows(
-            traces, kind=self.rd_kind, percentile=self.percentile,
-            sample_rate=rate, window_seed=self.windows_analyzed,
-            sample_target=self.sample_target, sample_floor=self.sample_floor,
-            precomputed_trd=pre, tenant_ids=act, pipeline=pipe)
-        self.windows_analyzed += 1
+        kw = self._monitor_kwargs(act)
+        if not self.fault_tolerant:
+            mon = analyze_windows(traces, precomputed_trd=pre,
+                                  pipeline=pipe, **kw)
+            self.windows_analyzed += 1
+            return mon, act, pipe
+        win = self._cur_window
+        rungs = (["device"] if pipe == "device" else []) + ["host", "tenant"]
+        for rung in rungs:
+            attempts = (self.retry_limit + 1) if rung != "tenant" else 1
+            for attempt in range(attempts):
+                try:
+                    if rung == "tenant":
+                        mon, ok = self._per_tenant_monitor(
+                            act, traces, kw, win)
+                        if not ok and act:
+                            # every solo analyze died too: total outage
+                            return None, act, ""
+                        self.windows_analyzed += 1
+                        return mon, ok, rung
+                    mon = analyze_windows(
+                        traces,
+                        precomputed_trd=(pre if rung == "host" else None),
+                        pipeline=("device" if rung == "device" else "host"),
+                        fault_hook=self._launch_hook(win, rung, attempt),
+                        **kw)
+                    self.windows_analyzed += 1
+                    return mon, act, rung
+                except TraceError:
+                    raise          # ingest bugs are not launch failures
+                except Exception:
+                    if self.backoff_base > 0 and attempt + 1 < attempts:
+                        time.sleep(min(self.backoff_base * (2 ** attempt),
+                                       1.0))
+            if rung == "device":
+                self.device_stepdowns += 1
+            elif rung == "host":
+                self.host_stepdowns += 1
+            self._record_degrade(DegradeEvent(win, -1, "stepdown",
+                                              rung=rung))
+        return None, act, ""
+
+    def _fallback_decision(self, trigger: tuple[ReconfigEvent, ...],
+                           reason: str,
+                           violations: tuple[str, ...] = ()
+                           ) -> AnalyzerDecision:
+        """Last-known-good: keep every tenant at its current size/policy."""
+        self.lkg_decisions += 1
+        sizes = self.allocated_sizes()
+        sizes2 = self.allocated_sizes2()
+        n_act = sum(t.active for t in self.tenants)
+        part = PartitionResult(
+            sizes[[i for i, t in enumerate(self.tenants) if t.active]],
+            False, 0.0, np.zeros(n_act))
+        decision = AnalyzerDecision(
+            sizes, [t.policy for t in self.tenants], False, part,
+            sizes2=sizes2, policies2=[t.policy2 for t in self.tenants],
+            partition2=None, trigger=tuple(trigger), quarantined=True,
+            guard=tuple(violations), degraded=reason,
+            deferred=tuple(sorted(self._defer_clear)))
+        self._record_degrade(DegradeEvent(self._cur_window, -1, reason))
+        self.history.append(decision)
+        return decision
+
+    def _apply_demotions(self) -> None:
+        """Hold WB tenants of a failed(-and-recovering) tier on the demoted
+        policy until ``demote_cooldown`` analyzes after recovery."""
+        if not self._demoted_until:
+            return
+        for (i, lv), until in list(self._demoted_until.items()):
+            if until is not None and self.windows_analyzed >= until:
+                del self._demoted_until[(i, lv)]
+                continue
+            t = self.tenants[i]
+            if lv == 1 and t.policy is WritePolicy.WB:
+                t.policy = self.demote_policy
+            elif lv == 2 and t.policy2 is WritePolicy.WB:
+                t.policy2 = self.demote_policy
+
+    def _build_decision(self, mon: MonitorResult, act: list[int],
+                        held: set[int],
+                        trigger: tuple[ReconfigEvent, ...]
+                        ) -> tuple[AnalyzerDecision, np.ndarray, int]:
+        """Alg. 3 + Eq. 2 over one monitor result.  Returns the decision,
+        the guard floors and the partitioned L1 budget."""
         for k, i in enumerate(act):
             t = self.tenants[i]
             t.h_fn = mon.curves[k]
@@ -316,21 +596,48 @@ class ECICacheManager:
                     # switches to the clean policy at a stricter threshold
                     t.policy2 = (WritePolicy.RO if wr >= self.w_threshold2
                                  else WritePolicy.WB)
+        self._apply_demotions()
 
+        down1 = 1 in self._down_levels
+        down2 = 2 in self._down_levels
+        cap1, cap2 = self.capacity, self.capacity2
+        pfn = self.partition_fn
+        if self.fault_tolerant and (down1 or down2 or held):
+            # held tenants keep their current partitions: solve the rest
+            # against the residual budget; a down level's budget is 0
+            held_sz = sum(int(self.tenants[i].cache.capacity) for i in held)
+            held_sz2 = sum(int(self.tenants[i].cache2.capacity)
+                           for i in held)
+            cap1 = 0 if down1 else max(self.capacity - held_sz, 0)
+            cap2 = 0 if down2 else max(self.capacity2 - held_sz2, 0)
+            if down1 or down2 or cap1 <= 0:
+                # degraded mode: the discrete greedy handles an empty
+                # budget exactly (the PGD box projection cannot go below
+                # its floors)
+                pfn = greedy_allocate
         part, part2 = two_level_solve(
-            mon.curves, self.capacity, self.capacity2, self.t_fast,
+            mon.curves, cap1, cap2, self.t_fast,
             self.t_fast2, self.t_slow, c_min=self.c_min,
-            partition_fn=self.partition_fn)
+            partition_fn=pfn)
 
-        sizes_full = np.zeros(len(self.tenants), dtype=np.int64)
-        sizes2_full = np.zeros(len(self.tenants), dtype=np.int64)
+        n_ten = len(self.tenants)
+        sizes_full = np.zeros(n_ten, dtype=np.int64)
+        sizes2_full = np.zeros(n_ten, dtype=np.int64)
+        floors = np.zeros(n_ten, dtype=np.int64)
         k = 0
         for i, t in enumerate(self.tenants):
-            if t.active:
-                sizes_full[i] = part.sizes[k]
-                if part2 is not None:
-                    sizes2_full[i] = part2.sizes[k]
-                k += 1
+            if not t.active:
+                continue
+            if i in held:
+                sizes_full[i] = t.cache.capacity
+                sizes2_full[i] = t.cache2.capacity
+                continue
+            sizes_full[i] = part.sizes[k]
+            if part2 is not None:
+                sizes2_full[i] = part2.sizes[k]
+            if not down1:
+                floors[i] = min(self.c_min, t.urd_size)
+            k += 1
         decision = AnalyzerDecision(sizes_full,
                                     [t.policy for t in self.tenants],
                                     part.feasible, part,
@@ -338,20 +645,188 @@ class ECICacheManager:
                                     policies2=[t.policy2
                                                for t in self.tenants],
                                     partition2=part2,
-                                    trigger=tuple(trigger))
-        self.history.append(decision)
-        return decision
+                                    trigger=tuple(trigger),
+                                    held=tuple(sorted(held)),
+                                    deferred=tuple(sorted(
+                                        self._defer_clear & held)))
+        return decision, floors, cap1
+
+    def analyze(self, window_trd: dict[int, np.ndarray] | None = None,
+                trigger: tuple[ReconfigEvent, ...] = ()
+                ) -> AnalyzerDecision:
+        """Alg. 1 / Alg. 4: run at every Δt window boundary.
+
+        All active tenants are analyzed in one fused pass
+        (``analyze_windows``): one stack-distance counting pass over the
+        concatenated window tape, batched curve construction, batched
+        Alg.-3 write ratios — optionally SHARDS-sampled (see the class
+        docstring).  ``window_trd`` optionally carries per-tenant raw TRD
+        sample arrays already computed by the batch engine's counting pass
+        (identical to ``reuse_distances(trace, "trd").distances``); the
+        exact path reuses them instead of re-counting.
+
+        Fault tolerance (see the module docstring): the monitor pass walks
+        the degradation ladder, the resulting decision is guard-validated,
+        and a violating or unobtainable decision degrades to the
+        last-known-good allocation instead of crashing or actuating
+        garbage.
+        """
+        window_trd = window_trd or {}
+        held = {i for i in self._held if self.tenants[i].active}
+        act = [i for i, t in enumerate(self.tenants)
+               if t.active and i not in held]
+        # guard rollback point: a quarantined decision must not leak the
+        # corrupted pass's Alg.-3 policy flips
+        pol_snap = [(t.policy, t.policy2) for t in self.tenants]
+        mon, act, rung = self._monitor_ladder(act, window_trd)
+        try:
+            if mon is None:
+                return self._fallback_decision(trigger, "monitor_outage")
+            held = {i for i in self._held if self.tenants[i].active}
+            if self.faults is not None:
+                self.faults.corrupt_monitor(mon, act, self._cur_window)
+            decision, floors, budget = self._build_decision(
+                mon, act, held, trigger)
+            report = validate_decision(decision, self.capacity,
+                                       self.capacity2, floors=floors,
+                                       floor_budget=budget)
+            if not report.ok:
+                self.guard_violations_observed += len(report.violations)
+                if self.fault_tolerant:
+                    retried = False
+                    if any(float(r) < 1.0 for r in mon.sample_rates):
+                        # a sampled pass can violate by estimation noise:
+                        # retry once exactly before giving up on the window
+                        self.sampled_exact_retries += 1
+                        retried = True
+                        try:
+                            kw = {**self._monitor_kwargs(act),
+                                  "sample_rate": None}
+                            mon2 = analyze_windows(
+                                [self.tenants[i].window_trace()
+                                 for i in act],
+                                pipeline="host", **kw)
+                            self.windows_analyzed += 1
+                            if self.faults is not None:
+                                self.faults.corrupt_monitor(
+                                    mon2, act, self._cur_window)
+                            decision, floors, budget = self._build_decision(
+                                mon2, act, held, trigger)
+                            report = validate_decision(
+                                decision, self.capacity, self.capacity2,
+                                floors=floors, floor_budget=budget)
+                        except Exception:
+                            report = None
+                    if report is None or not report.ok:
+                        self.guard_quarantines += 1
+                        vio = (() if report is None
+                               else report.violations)
+                        if retried and report is not None:
+                            self.guard_violations_observed += \
+                                len(report.violations)
+                        for t, (p, p2) in zip(self.tenants, pol_snap):
+                            t.policy, t.policy2 = p, p2
+                        return self._fallback_decision(
+                            trigger, "guard_quarantine", vio)
+                else:
+                    # intolerant: the violation WILL be actuated — count it
+                    # so garbage never ships silently
+                    decision = dataclasses.replace(
+                        decision, guard=report.violations)
+            if report is not None and report.ok:
+                self._lkg = decision
+            self.history.append(decision)
+            return decision
+        finally:
+            self._held = set()
+            self._defer_clear = set()
 
     # ------------------------------------------------------------ Actuator
     def actuate(self, decision: AnalyzerDecision) -> None:
+        if decision.guard and not decision.quarantined:
+            # an intolerant manager ships the violating decision; count it
+            # exactly once so garbage never actuates silently
+            self.guard_violations_actuated += 1
         sizes2 = (decision.sizes2 if decision.sizes2 is not None
                   else np.zeros(len(self.tenants), np.int64))
-        for t, size, size2 in zip(self.tenants, decision.sizes, sizes2):
+        defer = set(decision.deferred)
+        for i, (t, size, size2) in enumerate(
+                zip(self.tenants, decision.sizes, sizes2)):
             if t.active:
                 t.cache.resize(int(size))
                 if self.capacity2 > 0 or t.cache2.capacity > 0:
                     t.cache2.resize(int(size2))
-                t.clear_window()
+                if i not in defer:
+                    t.clear_window()
+        # deferred (straggler) tapes now span >1 window: their precomputed
+        # single-window distances are invalid at the next analyze
+        self._accumulated = defer
+
+    # ------------------------------------------------- tier failure domain
+    def fail_tier(self, level: int, duration: int | None = None) -> int:
+        """Cache device of hierarchy ``level`` (1 = L1/HBM, 2 = L2/host)
+        crashes: drop every tenant's residents on that level, account the
+        lost dirty blocks (``dirty_loss``), demote WB tenants (see
+        ``note_tier_loss``).  ``duration`` (trace-replay mode) restores
+        the tier automatically after that many windows; ``None`` waits for
+        an explicit ``note_tier_recovery``.  Returns the dirty-block
+        count."""
+        dirty = 0
+        for t in self.tenants:
+            cache = t.cache if level == 1 else t.cache2
+            if len(cache):
+                _, d = cache.state_arrays()
+                if d is not None:
+                    dirty += int(np.asarray(d).sum())
+            cache.resize(0)
+        self.note_tier_loss(level, dirty)
+        if duration is not None:
+            self._tier_restore_at[level] = \
+                self.windows_run + max(int(duration), 1)
+        return dirty
+
+    def note_tier_loss(self, level: int, dirty_blocks: int = 0) -> None:
+        """Register a tier failure (serving path: ``TieredKVCache`` calls
+        this after dropping its own residents).  Marks the level down —
+        its partition budget is 0 until recovery — and demotes every WB
+        tenant on it to ``demote_policy`` (paper §3: WB's dirty blocks are
+        exactly what a cache-device crash loses; a tenant on a tier that
+        just failed must not keep buffering dirty data)."""
+        self.tier_failures += 1
+        self.dirty_loss += int(dirty_blocks)
+        self._down_levels.add(int(level))
+        for i, t in enumerate(self.tenants):
+            if not t.active:
+                continue
+            pol = t.policy if level == 1 else t.policy2
+            if pol is WritePolicy.WB:
+                # expiry is stamped at recovery (None = still down)
+                self._demoted_until.setdefault((i, int(level)), None)
+                if level == 1:
+                    t.policy = self.demote_policy
+                else:
+                    t.policy2 = self.demote_policy
+        self._record_degrade(DegradeEvent(
+            self.windows_run, -1, "tier_loss", level=int(level),
+            blocks=int(dirty_blocks)))
+
+    def note_tier_recovery(self, level: int) -> None:
+        """The failed tier is back: restore its budget and start the
+        WB-demotion cooldown clock (``demote_cooldown`` analyzes)."""
+        level = int(level)
+        if level not in self._down_levels:
+            return
+        self._down_levels.discard(level)
+        self._tier_restore_at.pop(level, None)
+        until = self.windows_analyzed + 1 + self.demote_cooldown
+        for key, u in list(self._demoted_until.items()):
+            if key[1] == level and u is None:
+                self._demoted_until[key] = until
+        self._record_degrade(DegradeEvent(
+            self.windows_run, -1, "tier_recover", level=level))
+
+    def tier_is_down(self, level: int) -> bool:
+        return int(level) in self._down_levels
 
     # --------------------------------------------------------- trace replay
     def _accumulate(self, t: TenantState, res: SimResult) -> None:
@@ -379,6 +854,46 @@ class ECICacheManager:
         self._joined.clear()
         return evs
 
+    def _fault_preamble(self, traces: list[Trace | None],
+                        win: int) -> list[Trace | None]:
+        """Apply the window's scheduled faults and quarantine bad tapes.
+
+        Runs only on a tolerant (or fault-injected) manager: restores
+        tiers whose outage expired, injects tape corruption / tier losses
+        / stragglers from the plan, and validates every incoming tape —
+        a malformed one is quarantined (replaced by an empty tape, tenant
+        held at last-known-good) instead of raising."""
+        for lv, at in list(self._tier_restore_at.items()):
+            if win >= at:
+                self.note_tier_recovery(lv)
+        self._held = set()
+        self._defer_clear = set()
+        if self.faults is not None and self.faults.enabled:
+            traces = self.faults.corrupt_traces(traces, win)
+            for spec in self.faults.at(win, "tier_loss"):
+                if spec.level not in self._down_levels:
+                    self.fail_tier(spec.level, duration=spec.duration)
+            for i in sorted(self.faults.stragglers(win)):
+                if 0 <= i < len(traces) and traces[i] is not None \
+                        and self.tenants[i].active:
+                    self._held.add(i)
+                    self._defer_clear.add(i)
+                    self.straggler_windows += 1
+                    self._record_degrade(DegradeEvent(win, i, "straggler"))
+        if self.fault_tolerant:
+            for i, tr in enumerate(traces):
+                if tr is None:
+                    continue
+                try:
+                    validate_trace(tr, tenant=i, window=win)
+                except TraceError:
+                    traces[i] = Trace(np.zeros(0, np.int64),
+                                      np.zeros(0, bool), tr.name)
+                    self._held.add(i)
+                    self.poisoned_windows += 1
+                    self._record_degrade(DegradeEvent(win, i, "poisoned"))
+        return traces
+
     def run_window(self, traces: list[Trace | None],
                    engine: str | None = None) -> None:
         """Replay one Δt window for every tenant, then analyze + actuate.
@@ -391,6 +906,9 @@ class ECICacheManager:
         """
         engine = self.engine if engine is None else engine
         win = self.windows_run
+        self._cur_window = win
+        if self.fault_tolerant or self.faults is not None:
+            traces = self._fault_preamble(list(traces), win)
         events = self._drain_joined(win)
         for i, tr in enumerate(traces):
             if tr is None and self.tenants[i].active:
@@ -502,4 +1020,19 @@ class ECICacheManager:
             "windows_run": self.windows_run,
             "windows_analyzed": self.windows_analyzed,
             "reconfig_events": self.reconfig_events,
+            # unified fallback/degrade telemetry (each counter increments
+            # exactly once per event; all 0 on a healthy fault-free run)
+            "dirty_loss": self.dirty_loss,
+            "tier_failures": self.tier_failures,
+            "guard_quarantines": self.guard_quarantines,
+            "guard_violations_observed": self.guard_violations_observed,
+            "guard_violations_actuated": self.guard_violations_actuated,
+            "device_stepdowns": self.device_stepdowns,
+            "host_stepdowns": self.host_stepdowns,
+            "tenant_quarantines": self.tenant_quarantines,
+            "lkg_decisions": self.lkg_decisions,
+            "sampled_exact_retries": self.sampled_exact_retries,
+            "poisoned_windows": self.poisoned_windows,
+            "straggler_windows": self.straggler_windows,
+            "degrade_events": self.degrade_events,
         }

@@ -103,7 +103,7 @@ from repro.core.batch_sim import (_accel_default, _stack_distances_host,
 from repro.core.mrc import BatchedHitRatioFunctions, build_hit_ratio_functions
 from repro.core.reuse_distance import (auto_sample_rate, shards_keep_mask,
                                        shards_salt)
-from repro.core.trace import Trace
+from repro.core.trace import Trace, validate_trace
 
 __all__ = ["MonitorResult", "analyze_windows"]
 
@@ -258,7 +258,8 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
                     precomputed_trd: list[np.ndarray | None] | None = None,
                     tenant_ids: list[int] | None = None,
                     backend: str = "auto", pipeline: str = "host",
-                    profile=None) -> MonitorResult:
+                    profile=None, validate: bool = False,
+                    fault_hook=None) -> MonitorResult:
     """Analyze every tenant's Δt window in one fused pass (see module doc).
 
     ``precomputed_trd[i]`` (host exact path only) carries tenant i's raw
@@ -269,6 +270,15 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
     program (one jit, one host sync — requires ``percentile == 100``);
     ``profile`` (a ``device_pipeline.StageProfile``) records per-stage
     times and host syncs on either pipeline.
+
+    ``validate=True`` checks every tape against the ingest contract first
+    and raises ``TraceError`` with (tenant, window) coordinates on a
+    malformed one (``window_seed`` doubles as the window coordinate) —
+    direct callers get one clear error instead of a cryptic numpy/lax
+    failure deep in the counting pass.  ``fault_hook`` (internal, fault
+    injection) is invoked once at the pipeline's dispatch boundary: on
+    the host path right before the counting/curve stage, on the device
+    path immediately before the fused program launch.
     """
     if kind not in ("trd", "urd"):
         raise ValueError(f"kind must be 'trd' or 'urd', got {kind!r}")
@@ -285,6 +295,10 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
     m = int(bounds[-1])
     ids = np.asarray(tenant_ids if tenant_ids is not None else range(n),
                      dtype=np.int64)
+    if validate:
+        for i, t in enumerate(traces):
+            validate_trace(t, tenant=int(ids[i]) if i < ids.size else i,
+                           window=window_seed)
 
     if sample_rate is None:
         # ------------------------------------------------------ exact path
@@ -298,9 +312,12 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
             addrs = (np.concatenate([t.addrs for t in traces]) if m
                      else np.zeros(0, np.int64))
             curves, urd, wr, _ = monitor_window_device(
-                addrs, is_read, bounds, lens, kind=kind, profile=profile)
+                addrs, is_read, bounds, lens, kind=kind, profile=profile,
+                launch_hook=fault_hook)
             return MonitorResult(curves, urd, wr, np.ones(n),
                                  np.zeros(n), kind)
+        if fault_hook is not None:
+            fault_hook()
         pre = precomputed_trd or []
         dist = np.full(m, -1, dtype=np.int64)
         need = []
@@ -384,8 +401,10 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
         from repro.core.device_pipeline import monitor_window_device
         curves, urd, wr, distinct = monitor_window_device(
             addrs_s, read_s, sub_bounds, lens, rates=rates, kind=kind,
-            profile=profile)
+            profile=profile, launch_hook=fault_hook)
     else:
+        if fault_hook is not None:
+            fault_hook()
         with _pstage(profile, "links"):
             layout = padded_segment_layout(sub_bounds)
             prev, nxt_c = _segment_links(addrs_s, tid_s, sub_bounds, layout)

@@ -25,10 +25,69 @@ import numpy as np
 __all__ = [
     "AccessClass",
     "Trace",
+    "TraceError",
     "classify_accesses",
     "request_type_mix",
     "total_cache_writes_wb",
+    "validate_trace",
+    "validate_trace_arrays",
 ]
+
+
+class TraceError(ValueError):
+    """A malformed trace at the Monitor/manager ingest boundary.
+
+    Carries the (tenant, window) coordinates of the offending tape so a
+    thousand-tenant deployment's logs point at the culprit instead of a
+    cryptic numpy/lax failure deep inside the counting pass.
+    """
+
+    def __init__(self, msg: str, tenant: int = -1, window: int = -1):
+        self.tenant = int(tenant)
+        self.window = int(window)
+        super().__init__(f"{msg} (tenant={self.tenant}, window={self.window})")
+
+
+def validate_trace_arrays(addrs, is_read, tenant: int = -1,
+                          window: int = -1) -> None:
+    """Validate one window tape's raw arrays; raise ``TraceError`` if bad.
+
+    Checks (the full ingest contract): 1-D arrays of equal length, integer
+    block addresses, non-negative addresses, op codes either bool or
+    integers restricted to {0 (write), 1 (read)}.  Empty tapes are valid
+    (an idle tenant-window).
+    """
+    a = np.asarray(addrs)
+    r = np.asarray(is_read)
+    if a.ndim != 1 or r.ndim != 1:
+        raise TraceError("trace arrays must be 1-D", tenant, window)
+    if a.shape != r.shape:
+        raise TraceError(
+            f"addrs length {a.shape[0]} != is_read length {r.shape[0]}",
+            tenant, window)
+    if not np.issubdtype(a.dtype, np.integer):
+        raise TraceError(
+            f"non-integer block addresses (dtype {a.dtype})", tenant, window)
+    if a.size and int(a.min()) < 0:
+        raise TraceError(
+            f"negative block address {int(a.min())}", tenant, window)
+    if r.dtype != np.bool_:
+        if not np.issubdtype(r.dtype, np.integer):
+            raise TraceError(
+                f"op codes must be bool or {{0,1}} ints (dtype {r.dtype})",
+                tenant, window)
+        if r.size:
+            bad = (r != 0) & (r != 1)
+            if bad.any():
+                raise TraceError(
+                    f"unknown op code {int(r[bad][0])} (expected 0=write, "
+                    f"1=read)", tenant, window)
+
+
+def validate_trace(trace: "Trace", tenant: int = -1,
+                   window: int = -1) -> None:
+    """``validate_trace_arrays`` over a ``Trace`` (same raises)."""
+    validate_trace_arrays(trace.addrs, trace.is_read, tenant, window)
 
 
 class AccessClass(enum.IntEnum):

@@ -103,6 +103,7 @@ class MultiTenantEngine:
         self.waiting: list[Request] = []
         self._rid = 0
         self.completed: list[Request] = []
+        self.aborted_restarts = 0    # requests restarted after a pool crash
 
     # ------------------------------------------------------------ intake
     def submit(self, req: Request) -> None:
@@ -202,8 +203,30 @@ class MultiTenantEngine:
                     self.pool.unpin(pid)      # reuse), but become evictable
         self.active = [r for r in self.active if not r.done]
 
+    # ----------------------------------------------------- tier failures
+    def _requeue_active(self) -> None:
+        """After an HBM-pool crash every in-flight request's KV is gone:
+        abort them and restart from the prompt (prepended to ``waiting``
+        so they re-admit first once the tier recovers)."""
+        for r in self.active:
+            for pid in r.pages:
+                self.pool.unpin(pid)       # no-op post-crash; safe anytime
+            r.pages = []
+            r.generated = []
+            r.length = 0
+            r.done = False
+            self.aborted_restarts += 1
+        self.waiting[:0] = self.active
+        self.active = []
+
     # -------------------------------------------------------------- loop
     def step(self) -> None:
+        if self.tiered.tier_down(1):
+            # admission control: no prefill/decode against a dead pool —
+            # in-flight work restarts once, new work queues until recovery
+            if self.active:
+                self._requeue_active()
+            return
         while self.waiting:
             self._prefill_one(self.waiting.pop(0))
         self._decode_batch()

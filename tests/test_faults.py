@@ -1,0 +1,444 @@
+"""Fault-injection harness + graceful-degradation ladder tests.
+
+Three layers of coverage:
+
+  * unit — the decision guard's invariant checks, the ingest validator's
+    ``TraceError`` coordinates, and each degrade counter incrementing
+    exactly once per injected event;
+  * differential — a manager with a *disabled* fault plan is bit-identical
+    to one with no plan at all (the default-off contract), and a faulted
+    run reconverges to the no-fault decisions within the documented K
+    windows after the last fault clears;
+  * chaos (hypothesis) — random seeded ``FaultPlan.chaos`` schedules: a
+    tolerant manager never raises, never actuates a guard-violating
+    decision, and always reconverges.  The nightly job deepens the sweep
+    via ``HYP_EXAMPLES_SCALE``.
+
+Plus the serving-tier half: an HBM-pool crash drops residents (dirty loss
+accounted), re-routes traffic to the host tier, demotes WB tenants, and
+the engine aborts/requeues in-flight requests under admission control.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from oracle import examples
+from repro.cache import BlockPool, TieredKVCache
+from repro.core import (ECICacheManager, FaultPlan, FaultSpec, GuardReport,
+                        InjectedFault, Trace, TraceError, WritePolicy,
+                        validate_decision, validate_trace_arrays)
+from repro.core.manager import AnalyzerDecision, DegradeEvent
+from repro.core.partitioner import PartitionResult
+
+SIM = dict(t_fast=1.0, t_slow=20.0)
+
+
+def mk_trace(seed: int, n: int = 400, spread: int = 120) -> Trace:
+    rng = np.random.default_rng(seed)
+    return Trace(rng.integers(0, spread, n), rng.random(n) < 0.6, f"t{seed}")
+
+
+def mk_manager(faults=None, capacity=6000, names=("a", "b", "c"), **kw):
+    kw.setdefault("c_min", 500)
+    return ECICacheManager(capacity, list(names), faults=faults,
+                           **SIM, **kw)
+
+
+def run_windows(mgr, n_windows, n_tenants=3, base=100):
+    for w in range(n_windows):
+        mgr.run_window([mk_trace(base + 10 * w + i) for i in range(n_tenants)])
+    return mgr
+
+
+def degrade_events(mgr, reason=None):
+    evs = [e for e in mgr.events if isinstance(e, DegradeEvent)]
+    return evs if reason is None else [e for e in evs if e.reason == reason]
+
+
+# =========================================================== guard (unit)
+def _decision(sizes, policies=None, latency=0.0, hit_ratios=None,
+              sizes2=None, policies2=None):
+    sizes = np.asarray(sizes)
+    if policies is None:
+        policies = [WritePolicy.WB] * len(sizes)
+    hr = np.zeros(len(sizes)) if hit_ratios is None else np.asarray(
+        hit_ratios, dtype=np.float64)
+    part = PartitionResult(sizes, True, latency, hr)
+    return AnalyzerDecision(sizes, policies, True, part, sizes2=sizes2,
+                            policies2=policies2)
+
+
+def test_guard_passes_clean_decision():
+    rep = validate_decision(_decision([10, 20, 30]), capacity=100)
+    assert rep.ok and rep.violations == ()
+
+
+@pytest.mark.parametrize("sizes,msg", [
+    ([60, 60], "exceed capacity"),
+    ([-5, 10], "negative L1"),
+    ([np.nan, 10], "non-finite L1"),
+    ([np.inf, 10], "non-finite L1"),
+])
+def test_guard_flags_bad_sizes(sizes, msg):
+    rep = validate_decision(_decision(sizes), capacity=100)
+    assert not rep.ok and any(msg in v for v in rep.violations)
+
+
+def test_guard_flags_l2_overflow_only_when_l2_exists():
+    d = _decision([10], sizes2=np.array([999]), policies2=[WritePolicy.WB])
+    assert validate_decision(d, capacity=100, capacity2=0).ok
+    rep = validate_decision(d, capacity=100, capacity2=50)
+    assert any("L2 sizes exceed" in v for v in rep.violations)
+
+
+def test_guard_flags_non_finite_objective_and_hit_ratios():
+    rep = validate_decision(_decision([10], latency=np.nan), capacity=100)
+    assert any("latency" in v for v in rep.violations)
+    rep = validate_decision(_decision([10], hit_ratios=[np.inf]),
+                            capacity=100)
+    assert any("hit ratios" in v for v in rep.violations)
+    rep = validate_decision(_decision([10], hit_ratios=[1.5]), capacity=100)
+    assert any("outside [0, 1]" in v for v in rep.violations)
+
+
+def test_guard_flags_invalid_policy():
+    rep = validate_decision(_decision([10], policies=["wb"]), capacity=100)
+    assert any("invalid L1 policy" in v for v in rep.violations)
+
+
+def test_guard_floor_checks():
+    d = _decision([5, 50])
+    # floor violated for tenant 0
+    rep = validate_decision(d, capacity=100, floors=np.array([20, 20]))
+    assert any("floor violated for tenants [0]" in v for v in rep.violations)
+    # floors that do not fit the budget are definitionally unsatisfiable
+    assert validate_decision(d, capacity=100, floors=np.array([20, 20]),
+                             floor_budget=30).ok
+    # a negative floor means the monitor reported a corrupt URD
+    rep = validate_decision(d, capacity=100, floors=np.array([-7, 0]))
+    assert any("corrupt URD" in v for v in rep.violations)
+
+
+def test_guard_report_default_ok():
+    assert GuardReport().ok
+
+
+# ================================================== ingest TraceError(s)
+def test_trace_error_carries_coordinates():
+    with pytest.raises(TraceError) as ei:
+        validate_trace_arrays(np.array([1, -4]), np.array([True, False]),
+                              tenant=7, window=13)
+    assert ei.value.tenant == 7 and ei.value.window == 13
+    assert "(tenant=7, window=13)" in str(ei.value)
+
+
+@pytest.mark.parametrize("addrs,reads,msg", [
+    (np.array([[1]]), np.array([[True]]), "1-D"),
+    (np.array([1, 2]), np.array([True]), "length"),
+    (np.array([1.5]), np.array([True]), "non-integer"),
+    (np.array([-3]), np.array([True]), "negative block address"),
+    (np.array([1]), np.array([1.0]), "op codes must be bool"),
+    (np.array([1, 2]), np.array([1, 2], np.int8), "unknown op code 2"),
+])
+def test_ingest_validator_catches_each_corruption(addrs, reads, msg):
+    with pytest.raises(TraceError, match=msg):
+        validate_trace_arrays(addrs, reads)
+
+
+def test_ingest_validator_accepts_valid_and_empty():
+    validate_trace_arrays(np.array([], np.int64), np.array([], bool))
+    validate_trace_arrays(np.array([3, 1]), np.array([0, 1], np.int64))
+
+
+def test_manager_record_raises_with_coordinates():
+    mgr = run_windows(mk_manager(), 2)
+    with pytest.raises(TraceError) as ei:
+        mgr.record(1, np.array([-1]), np.array([True]))
+    assert ei.value.tenant == 1 and ei.value.window == 2
+
+
+# ===================================== default-off bit-identity contract
+def test_disabled_plan_is_bit_identical():
+    base = run_windows(mk_manager(), 8)
+    off = run_windows(mk_manager(faults=FaultPlan((), seed=3)), 8)
+    sb, so = base.summary(), off.summary()
+    assert set(sb) == set(so)
+    for k in sb:
+        assert np.array_equal(sb[k], so[k]), k
+    for tb, to in zip(base.tenants, off.tenants):
+        assert tb.cache.capacity == to.cache.capacity
+        assert tb.policy is to.policy
+    for db, do in zip(base.history, off.history):
+        assert np.array_equal(db.sizes, do.sizes)
+        assert db.policies == do.policies
+    assert off.summary()["degrade_events"] == 0
+
+
+# ============================== counters increment exactly once per event
+def test_poison_counts_once_and_quarantines_tenant_window():
+    plan = FaultPlan((FaultSpec("poison", window=2, tenant=1),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan), 5)
+    s = mgr.summary()
+    assert s["poisoned_windows"] == 1 and s["degrade_events"] == 1
+    (ev,) = degrade_events(mgr, "poisoned")
+    assert ev.window == 2 and ev.tenant == 1
+    assert s["guard_violations_actuated"] == 0
+
+
+def test_straggler_counts_per_window_and_defers():
+    plan = FaultPlan((FaultSpec("straggler", window=1, tenant=0,
+                                duration=2),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan), 5)
+    s = mgr.summary()
+    assert s["straggler_windows"] == 2
+    assert [e.window for e in degrade_events(mgr, "straggler")] == [1, 2]
+    # while held, the tenant keeps its last-known-good size
+    held_dec = mgr.history[1]
+    assert held_dec.held == (0,) and 0 in held_dec.deferred
+
+
+def test_tier_loss_counts_once_with_dirty_blocks_and_recovery():
+    plan = FaultPlan((FaultSpec("tier_loss", window=3, level=1,
+                                duration=2),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan), 9)
+    s = mgr.summary()
+    assert s["tier_failures"] == 1
+    (loss,) = degrade_events(mgr, "tier_loss")
+    (rec,) = degrade_events(mgr, "tier_recover")
+    assert loss.window == 3 and loss.level == 1
+    assert rec.window == 5                    # duration 2: down for 3, 4
+    assert s["dirty_loss"] == loss.blocks > 0
+    # while down the L1 partition is empty; it refills after recovery
+    assert all(sz == 0 for sz in mgr.history[3].sizes)
+    assert any(sz > 0 for sz in mgr.history[8].sizes)
+
+
+def test_tier_loss_demotes_wb_for_cooldown_then_restores():
+    plan = FaultPlan((FaultSpec("tier_loss", window=3, level=1),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan, demote_cooldown=2), 9)
+    pol = [d.policies[0] for d in mgr.history]
+    assert pol[2] is WritePolicy.WB           # before the crash
+    # crash window + cooldown analyzes after recovery stay demoted
+    assert pol[3] is WritePolicy.WT
+    assert pol[4] is WritePolicy.WT and pol[5] is WritePolicy.WT
+    assert pol[6] is WritePolicy.WB           # cooldown expired
+
+
+def test_pipeline_retry_succeeds_in_rung_without_stepdown():
+    plan = FaultPlan((FaultSpec("pipeline", window=2, rung="host",
+                                count=1),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan, retry_limit=2), 5)
+    s = mgr.summary()
+    assert s["host_stepdowns"] == 0 and s["lkg_decisions"] == 0
+    assert s["degrade_events"] == 0
+
+
+def test_pipeline_exhaustion_steps_down_to_per_tenant_rung():
+    plan = FaultPlan((FaultSpec("pipeline", window=2, rung="host",
+                                count=99),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan, retry_limit=1), 5)
+    s = mgr.summary()
+    assert s["host_stepdowns"] == 1
+    (ev,) = degrade_events(mgr, "stepdown")
+    assert ev.window == 2 and ev.rung == "host"
+    # the per-tenant rung still produced a full decision
+    assert not mgr.history[2].quarantined
+    assert s["guard_violations_actuated"] == 0
+
+
+def test_all_rungs_dead_falls_back_to_last_known_good():
+    plan = FaultPlan((FaultSpec("pipeline", window=2, count=99),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan, retry_limit=0), 5)
+    s = mgr.summary()
+    assert s["host_stepdowns"] == 1
+    assert s["tenant_quarantines"] == 3       # every solo analyze died too
+    assert s["lkg_decisions"] == 1
+    dec = mgr.history[2]
+    assert dec.quarantined and dec.degraded == "monitor_outage"
+    # LKG reissues the sizes that were current going into the window
+    assert np.array_equal(dec.sizes, mgr.history[1].sizes)
+
+
+def test_curve_corruption_quarantined_by_guard():
+    for mode in (0, 1, 2):                    # NaN / inf heights, bad URD
+        plan = FaultPlan((FaultSpec("curve_nan", window=3, tenant=1,
+                                    param=mode),), seed=1)
+        mgr = run_windows(mk_manager(faults=plan), 6)
+        s = mgr.summary()
+        assert s["guard_quarantines"] == 1, mode
+        assert s["guard_violations_observed"] >= 1
+        assert s["guard_violations_actuated"] == 0
+        assert s["lkg_decisions"] == 1
+        dec = mgr.history[3]
+        assert dec.quarantined and dec.degraded == "guard_quarantine"
+        assert len(dec.guard) >= 1
+        # the corrupted pass's Alg.-3 policy flips must not leak
+        assert dec.policies[1] is mgr.history[2].policies[1]
+
+
+def test_intolerant_manager_counts_actuated_violations():
+    plan = FaultPlan((FaultSpec("curve_nan", window=3, tenant=1),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan, fault_tolerant=False), 6)
+    s = mgr.summary()
+    assert s["guard_violations_actuated"] == 1
+    assert s["guard_quarantines"] == 0
+    assert len(mgr.history[3].guard) >= 1     # violation shipped, flagged
+
+
+def test_sampled_violation_retries_exact_before_quarantine():
+    plan = FaultPlan((FaultSpec("curve_nan", window=3, tenant=0),), seed=1)
+    mgr = mk_manager(faults=plan, sample_rate=0.3)
+    run_windows(mgr, 6)
+    s = mgr.summary()
+    assert s["sampled_exact_retries"] == 1    # corruption survives the
+    assert s["guard_quarantines"] == 1        # exact retry -> quarantine
+    assert s["guard_violations_actuated"] == 0
+
+
+def test_injected_fault_is_runtime_error():
+    assert issubclass(InjectedFault, RuntimeError)
+    with pytest.raises(ValueError):
+        FaultSpec("bogus", window=0)
+    with pytest.raises(ValueError):
+        FaultSpec("poison", window=0, duration=0)
+
+
+# ======================================================== reconvergence
+def _final_state(mgr):
+    return ([t.cache.capacity for t in mgr.tenants],
+            [t.policy for t in mgr.tenants])
+
+
+def test_standard_plan_reconverges_within_k():
+    plan = FaultPlan.standard(3, 8, seed=1)
+    k = plan.reconverge_bound(demote_cooldown=2)
+    n = plan.last_fault_window() + k + 1
+    base = run_windows(mk_manager(), n)
+    faulted = run_windows(mk_manager(faults=plan), n)
+    assert _final_state(base) == _final_state(faulted)
+    assert faulted.summary()["guard_violations_actuated"] == 0
+
+
+@settings(max_examples=examples(10), deadline=None)
+@given(st.integers(0, 10**6))
+def test_chaos_never_raises_never_actuates_garbage(seed):
+    """Random fault schedules: the tolerant manager survives anything the
+    plan throws at it and what it actuates always passes the guard."""
+    plan = FaultPlan.chaos(3, 12, seed=seed, max_faults=4)
+    n = plan.last_fault_window() + plan.reconverge_bound(2) + 1
+    base = run_windows(mk_manager(), n, base=seed % 1000)
+    faulted = run_windows(mk_manager(faults=plan), n, base=seed % 1000)
+    s = faulted.summary()
+    assert s["guard_violations_actuated"] == 0
+    assert _final_state(base) == _final_state(faulted)
+    # every non-quarantined decision in the run satisfies the invariants
+    for d in faulted.history:
+        if not d.quarantined:
+            assert validate_decision(d, faulted.capacity,
+                                     faulted.capacity2).ok
+
+
+@pytest.mark.slow
+@settings(max_examples=examples(40), deadline=None)
+@given(st.integers(0, 10**9), st.integers(2, 5))
+def test_chaos_deep_sweep(seed, n_tenants):
+    """Nightly: wider tenant counts and denser fault schedules."""
+    plan = FaultPlan.chaos(n_tenants, 14, seed=seed, max_faults=6)
+    n = plan.last_fault_window() + plan.reconverge_bound(2) + 1
+    names = [f"t{i}" for i in range(n_tenants)]
+    base = run_windows(mk_manager(names=names), n, n_tenants=n_tenants,
+                       base=seed % 1000)
+    faulted = run_windows(mk_manager(faults=plan, names=names), n,
+                          n_tenants=n_tenants, base=seed % 1000)
+    assert faulted.summary()["guard_violations_actuated"] == 0
+    assert _final_state(base) == _final_state(faulted)
+
+
+# ============================================== serving tiers + engine
+def _tiered(capacity=64, capacity2=128, n_pages=64, **kw):
+    mgr = ECICacheManager(capacity, ["a", "b"], c_min=4,
+                          capacity2=capacity2, fault_tolerant=True,
+                          demote_cooldown=1, **SIM, **kw)
+    pool = BlockPool(n_pages, 16, 1, 1, 8, allocate_device=False)
+    return TieredKVCache(pool, mgr, window_events=10**9), pool, mgr
+
+
+def test_pool_crash_drops_dirty_and_reroutes():
+    tk, pool, mgr = _tiered()
+    for k in range(20):
+        tk.access_page(0, ("a", k), fresh=True)
+        tk.access_page(1, ("b", k), fresh=True)
+    out = tk.fail_tier(1)
+    assert out == {"dropped": 40, "dirty": 40}
+    assert tk.tier_down(1) and not pool.meta and not pool.by_key
+    assert len(pool.free) == pool.n_pages
+    # WB tenants demoted at the tiered layer too
+    assert all(p is WritePolicy.WT for p in tk.policies.values())
+    assert mgr.summary()["dirty_loss"] == 40
+    # traffic re-routes: no HBM allocation while down
+    assert tk.access_page(0, ("a", 100), fresh=True) == "host"
+    assert tk.access_page(0, ("a", 100), fresh=False) == "host"
+    assert not pool.meta
+    # recovery restores routing; a second fail_tier while down is a no-op
+    assert tk.fail_tier(1) == {"dropped": 0, "dirty": 0}
+    tk.recover_tier(1)
+    assert not tk.tier_down(1)
+    s = tk.summary()
+    assert s["tier_failures"] == 1 and s["dropped_pages"] == 40
+    assert s["dirty_loss"] == 40
+
+
+def test_host_tier_crash_requires_managed_and_drops_pages():
+    tk, pool, mgr = _tiered()
+    for k in range(10):                       # RO-style host residency
+        tk._host_insert(0, ("a", k))
+    out = tk.fail_tier(2)
+    assert out["dropped"] == 10 and out["dirty"] == 0
+    # while down, host lookups miss and inserts drop
+    assert not tk._host_materialized(0, ("a", 1))
+    tk._host_insert(0, ("a", 99))
+    assert sum(len(q) for q in tk.host_lru.values()) == 0
+    tk.recover_tier(2)
+
+    tk2, _, _ = _tiered(capacity2=0)
+    with pytest.raises(ValueError, match="managed host"):
+        tk2.fail_tier(2)
+
+
+def test_engine_aborts_and_requeues_over_pool_crash():
+    pytest.importorskip("jax")
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.models.attention import build_heads
+    from repro.serve.engine import MultiTenantEngine, Request
+
+    cfg = get_smoke_config("qwen3_0_6b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    _, hkv = build_heads(cfg, 1)
+    mgr = ECICacheManager(128, ["t0"], c_min=8, initial_blocks=32,
+                          fault_tolerant=True, **SIM)
+    pool = BlockPool(256, 8, cfg.n_layers, hkv, cfg.head_dim,
+                     dtype=jnp.float32)
+    tiered = TieredKVCache(pool, mgr, window_events=10**9)
+    eng = MultiTenantEngine(cfg, params, tiered, page_size=8,
+                            max_pages_per_seq=16)
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    eng.submit(Request(tenant=0, prompt=prompt, max_new_tokens=6))
+    eng.step()                                # prefill + first decode
+    assert eng.active and not eng.completed
+
+    tiered.fail_tier(1)
+    eng.step()                                # admission control kicks in
+    assert eng.aborted_restarts == 1
+    assert not eng.active and len(eng.waiting) == 1
+    eng.step()                                # still down: nothing admitted
+    assert not eng.active and not eng.completed
+
+    tiered.recover_tier(1)
+    eng.run(32)
+    assert len(eng.completed) == 1
+    done = eng.completed[0]
+    assert len(done.generated) == 6 and done.done
