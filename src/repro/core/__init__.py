@@ -13,7 +13,8 @@ from repro.core.characterize import (PhaseDetector, PhaseEvent,
                                      characterize_windows)
 from repro.core.device_pipeline import (DeviceWindowPipeline, StageProfile,
                                         WindowDecision, greedy_walk_device,
-                                        monitor_window_device)
+                                        monitor_window_device,
+                                        transfer_sanitizer)
 from repro.core.faults import (FAULT_KINDS, FaultPlan, FaultSpec,
                                InjectedFault)
 from repro.core.guard import GuardReport, validate_decision
@@ -61,7 +62,8 @@ __all__ = [
     "ro_token_replay_device", "ro_token_replay_levels_device",
     "sampled_reuse_distances", "shards_salt",
     "simulate", "simulate_batch", "simulate_many", "stack_distances",
-    "total_cache_writes_wb", "two_level_solve", "urd_cache_blocks",
+    "total_cache_writes_wb", "transfer_sanitizer", "two_level_solve",
+    "urd_cache_blocks",
     "validate_decision", "validate_trace", "validate_trace_arrays",
     "write_ratio",
 ]

@@ -67,7 +67,7 @@ from repro.kernels.cache_sim.ops import (_on_tpu, segment_counts_device,
 
 __all__ = ["StageProfile", "WindowIngest", "WindowDecision",
            "DeviceWindowPipeline", "greedy_walk_device", "ingest_window",
-           "monitor_window_device"]
+           "monitor_window_device", "transfer_sanitizer"]
 
 
 # --------------------------------------------------------------- profiling
@@ -128,6 +128,26 @@ def _x64(f64: bool):
         from jax.experimental import enable_x64
         return enable_x64()
     return contextlib.nullcontext()
+
+
+def transfer_sanitizer(enabled: bool = True):
+    """Runtime teeth for the zero-hidden-sync window contract.
+
+    Entered around a window's dispatch + fetch, ``jax.transfer_guard
+    ("disallow")`` makes every *implicit* transfer raise — a stray
+    ``.item()``, ``float()`` or numpy coercion on a device value anywhere
+    under the window program becomes an immediate ``XlaRuntimeError``
+    instead of a silent sync the ``StageProfile`` counter can only count
+    after the fact.  Explicit ``jax.device_put`` / ``jax.device_get``
+    stay exempt, which is exactly the contract: ingest transfers in via
+    ``device_put``, and the window's one permitted sync — the decision
+    fetch in ``_fetch`` — goes out via ``device_get``.  Complements the
+    static RL001 pass (tools/repro_lint), which cannot see through
+    dynamic dispatch.
+    """
+    if not enabled:
+        return contextlib.nullcontext()
+    return jax.transfer_guard("disallow")
 
 
 def _np_dtypes(f64: bool):
@@ -425,9 +445,10 @@ def _programs(key: tuple) -> dict:
 
 
 # --------------------------------------------------------------- dispatch
-def _dispatch_monitor(ing: WindowIngest, profile: StageProfile | None):
+def _dispatch_monitor(ing: WindowIngest, profile: StageProfile | None,
+                      sanitize: bool = False):
     progs = _programs(ing.key)
-    with _x64(ing.f64):
+    with transfer_sanitizer(sanitize), _x64(ing.f64):
         if profile is not None and profile.staged:
             with profile.stage("count"):
                 dist = progs["count"](ing.dev)
@@ -446,14 +467,20 @@ def _dispatch_monitor(ing: WindowIngest, profile: StageProfile | None):
             return progs["monitor"](ing.dev)
 
 
-def _fetch(ing: WindowIngest, out, profile: StageProfile | None):
-    """The window's single host sync: block on the program, copy out."""
-    with _x64(ing.f64):
+def _fetch(ing: WindowIngest, out, profile: StageProfile | None,
+           sanitize: bool = False):
+    """The window's single host sync: block on the program, copy out.
+
+    The copy is an *explicit* ``jax.device_get`` — the one transfer the
+    ``transfer_sanitizer`` guard permits, so under ``sanitize`` any other
+    device->host escape in the window raises while this fetch stays legal.
+    """
+    with transfer_sanitizer(sanitize), _x64(ing.f64):
         with _pstage(profile, "fetch"):
             jax.block_until_ready(out)
             if profile is not None and not profile.staged:
                 profile.sync()
-        return [np.asarray(x) for x in out]
+        return jax.device_get(list(out))
 
 
 def _trivial_monitor(n: int, n_accesses: np.ndarray):
@@ -473,14 +500,17 @@ def monitor_window_device(addrs: np.ndarray, is_read: np.ndarray,
                           use_kernel: bool | None = None,
                           f64: bool | None = None,
                           profile: StageProfile | None = None,
-                          launch_hook=None):
+                          launch_hook=None,
+                          transfer_sanitize: bool = False):
     """Monitor outputs for one window, computed on device.
 
     Returns ``(curves, urd_sizes, write_ratios, cold_counts)`` —
     ``analyze_windows(pipeline="device")``'s backend.  One host sync (the
     fetch); bit-identical to the host monitor in f64 mode.  ``launch_hook``
     (fault injection) is invoked right before the fused program dispatch —
-    after ingest, at the real launch boundary.
+    after ingest, at the real launch boundary.  ``transfer_sanitize``
+    (default off, bit-identical when on) runs dispatch + fetch under the
+    ``transfer_sanitizer`` guard: any hidden host sync raises.
     """
     n = int(np.asarray(bounds).shape[0]) - 1
     n_acc = np.maximum(np.asarray(n_accesses, np.int64), 1)
@@ -493,8 +523,9 @@ def monitor_window_device(addrs: np.ndarray, is_read: np.ndarray,
         launch_hook()
     if ing is None:
         return _trivial_monitor(n, n_acc)
-    out = _dispatch_monitor(ing, profile)
-    edges_p, hgt_p, kcnt, urd, wr = _fetch(ing, out, profile)
+    out = _dispatch_monitor(ing, profile, sanitize=transfer_sanitize)
+    edges_p, hgt_p, kcnt, urd, wr = _fetch(ing, out, profile,
+                                           sanitize=transfer_sanitize)
     curves = BatchedHitRatioFunctions.from_padded(
         edges_p, hgt_p, kcnt, ing.row_start, ing.n_acc)
     return (curves, np.asarray(urd, np.int64), np.asarray(wr, np.float64),
@@ -532,7 +563,8 @@ class DeviceWindowPipeline:
     def __init__(self, capacity: int, t_fast: float = 1.0,
                  t_slow: float = 20.0, c_min: int = 0, kind: str = "urd",
                  weights: np.ndarray | None = None,
-                 use_kernel: bool | None = None, f64: bool | None = None):
+                 use_kernel: bool | None = None, f64: bool | None = None,
+                 transfer_sanitize: bool = False):
         self.capacity = int(capacity)
         self.t_fast, self.t_slow = float(t_fast), float(t_slow)
         self.c_min = int(c_min)
@@ -541,6 +573,10 @@ class DeviceWindowPipeline:
                                                                np.float64)
         self.use_kernel = use_kernel
         self.f64 = _f64_default() if f64 is None else bool(f64)
+        # default-off, bit-identical when on: window dispatch + fetch run
+        # under jax.transfer_guard("disallow") so any hidden host sync
+        # raises; the decision fetch stays legal (explicit device_get)
+        self.transfer_sanitize = bool(transfer_sanitize)
 
     # ------------------------------------------------------------ plumbing
     def _params(self, n: int) -> dict:
@@ -570,7 +606,11 @@ class DeviceWindowPipeline:
                   profile: StageProfile | None = None):
         progs = _programs(ing.key)
         p = self._params(ing.n)
-        with _x64(ing.f64):
+        with transfer_sanitizer(self.transfer_sanitize), _x64(ing.f64):
+            if self.transfer_sanitize:
+                # under the guard the numpy params must cross explicitly
+                # (inside the x64 scope so dtypes match the implicit path)
+                p = jax.device_put(p)
             if profile is not None and profile.staged:
                 with profile.stage("count"):
                     dist = progs["count"](ing.dev)
@@ -602,7 +642,7 @@ class DeviceWindowPipeline:
     def _finish(self, ing: WindowIngest, out,
                 profile: StageProfile | None = None) -> WindowDecision:
         (edges_p, hgt_p, kcnt, urd, wr, sizes, h_at, lat, feas) = \
-            _fetch(ing, out, profile)
+            _fetch(ing, out, profile, sanitize=self.transfer_sanitize)
         curves = BatchedHitRatioFunctions.from_padded(
             edges_p, hgt_p, kcnt, ing.row_start, ing.n_acc)
         if profile is not None:

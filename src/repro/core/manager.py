@@ -266,7 +266,12 @@ class ECICacheManager:
                  c_min: int = 1000, w_threshold: float = 0.5,
                  t_fast: float = 1.0, t_slow: float = 20.0,
                  t_write_bypass: float | None = None, flush_cost: float = 0.0,
-                 rd_kind: str = "urd", adaptive_policy: bool = True,
+                 rd_kind: str = "urd",
+                 # the adaptive write policy IS the paper's ECI scheme
+                 # (Alg. 2) — shipping it on is the reproduction contract;
+                 # the off-path is the Centaur/static baselines, pinned
+                 # bit-identical in test_baselines.
+                 adaptive_policy: bool = True,  # repro-lint: disable=RL003
                  sample_rate: float | str | None = None,
                  initial_blocks: int | None = None,
                  percentile: float = 100.0,

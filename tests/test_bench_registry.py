@@ -1,0 +1,94 @@
+"""Audit the benchmark registry against the CI wiring.
+
+Three contracts, checked statically so the audit costs milliseconds:
+
+1. every ``benchmarks/bench_*.py`` module is registered in ``run.py``'s
+   ``BENCHES`` table (and nothing registered is missing on disk) — a
+   bench that isn't registered never runs under ``python -m
+   benchmarks.run`` and its reproduction checks silently vanish;
+2. every module that emits a ``BENCH_*.json`` artifact has a ``--smoke``
+   invocation in ``.github/workflows/ci.yml``, so its gates run on every
+   push, not just nightly;
+3. every gate is *enforced*, not just reported: each emitter's
+   ``__main__`` block raises ``SystemExit`` when any value in
+   ``result["checks"]`` is falsy, and ``run.py`` aggregates the same
+   ``checks`` dicts into its PASS/FAIL summary.
+"""
+import ast
+import pathlib
+import re
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+BENCH_DIR = REPO / "benchmarks"
+CI = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+
+
+def bench_modules():
+    return sorted(p.stem for p in BENCH_DIR.glob("bench_*.py"))
+
+
+def registered_benches():
+    """Parse run.py's BENCHES literal: [(name, module), ...]."""
+    tree = ast.parse((BENCH_DIR / "run.py").read_text())
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign)
+                and any(getattr(t, "id", None) == "BENCHES"
+                        for t in node.targets)):
+            return sorted(
+                (elt.elts[0].value, elt.elts[1].id)
+                for elt in node.value.elts)
+    raise AssertionError("BENCHES table not found in benchmarks/run.py")
+
+
+def json_emitters():
+    """Modules that write a BENCH_*.json artifact."""
+    out = {}
+    for p in sorted(BENCH_DIR.glob("bench_*.py")):
+        m = re.search(r"open\(\"(BENCH_\w+\.json)\", \"w\"\)",
+                      p.read_text())
+        if m:
+            out[p.stem] = m.group(1)
+    return out
+
+
+def test_every_bench_module_is_registered():
+    regs = registered_benches()
+    assert sorted(mod for _, mod in regs) == bench_modules()
+    # display name matches the module name minus the bench_ prefix
+    for name, mod in regs:
+        assert mod == f"bench_{name}"
+
+
+def test_json_emitters_cover_the_gated_suites():
+    # the four artifact-emitting suites; growing this set is fine,
+    # shrinking it means a gate was dropped
+    assert set(json_emitters()) >= {
+        "bench_etica_two_level", "bench_faults",
+        "bench_monitor_scale", "bench_scenarios"}
+
+
+def test_every_emitter_has_a_ci_smoke_invocation():
+    for mod in json_emitters():
+        pat = rf"python -m benchmarks\.{mod} --smoke"
+        assert re.search(pat, CI), f"{mod}: no --smoke step in ci.yml"
+
+
+def test_every_emitter_enforces_its_checks():
+    """Gates fail the process, they don't just print: the __main__ block
+    must raise SystemExit when any check value is falsy."""
+    for mod in json_emitters():
+        src = (BENCH_DIR / f"{mod}.py").read_text()
+        assert re.search(
+            r"if not all\(result\[\"checks\"\]\.values\(\)\):\s*\n"
+            r"\s*raise SystemExit", src), mod
+
+
+def test_run_py_aggregates_checks_into_summary():
+    src = (BENCH_DIR / "run.py").read_text()
+    assert '.get("checks", {})' in src
+    assert "reproduction checks:" in src
+
+
+def test_ci_runs_the_linter_and_the_tests():
+    assert "python -m tools.repro_lint src tests benchmarks" in CI
+    assert "python -m pytest -x -q" in CI

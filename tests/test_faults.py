@@ -246,6 +246,21 @@ def test_pipeline_exhaustion_steps_down_to_per_tenant_rung():
     assert s["guard_violations_actuated"] == 0
 
 
+def test_device_rung_failure_steps_down_to_host():
+    plan = FaultPlan((FaultSpec("pipeline", window=2, rung="device",
+                                count=99),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan, retry_limit=1,
+                                 pipeline="device"), 4)
+    s = mgr.summary()
+    assert s["device_stepdowns"] == 1
+    assert s["host_stepdowns"] == 0
+    (ev,) = degrade_events(mgr, "stepdown")
+    assert ev.window == 2 and ev.rung == "device"
+    # the fused host rung still produced a full decision
+    assert not mgr.history[2].quarantined
+    assert s["guard_violations_actuated"] == 0
+
+
 def test_all_rungs_dead_falls_back_to_last_known_good():
     plan = FaultPlan((FaultSpec("pipeline", window=2, count=99),), seed=1)
     mgr = run_windows(mk_manager(faults=plan, retry_limit=0), 5)

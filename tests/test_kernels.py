@@ -4,8 +4,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.cache_sim.kernel import cache_sim_scan
-from repro.kernels.cache_sim.ref import cache_sim_ref
+from repro.kernels.cache_sim.kernel import (cache_sim_levels_scan,
+                                            cache_sim_scan,
+                                            cache_sim_segments_scan,
+                                            live_count_scan)
+from repro.kernels.cache_sim.ref import (cache_sim_levels_ref,
+                                         cache_sim_ref,
+                                         cache_sim_segments_ref,
+                                         live_counts_ref)
 from repro.kernels.flash_attention.kernel import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.mamba2_ssd.kernel import mamba2_ssd
@@ -125,6 +131,74 @@ def test_cache_sim_scan_sweep(n, tile, occ_mode):
     ref = cache_sim_ref(jnp.asarray(prev, jnp.int32),
                         jnp.asarray(nxt, jnp.int32), jnp.asarray(occ))
     assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("w,tile", [(32, 16), (64, 32)])
+@slow_sweep
+def test_cache_sim_segments_scan_sweep(w, tile):
+    """Segment-restricted kernel vs the dense segments oracle (interpret).
+
+    The tape is built the way ``padded_segment_layout`` guarantees it:
+    one independent segment per ``w``-aligned block, links severed at the
+    boundaries (each block's prev/nxt computed in isolation)."""
+    rng = np.random.default_rng(w)
+    from repro.core.trace import prev_next_occurrence
+    prevs, nxts, occs = [], [], []
+    for b in range(4):
+        addrs = rng.integers(0, max(4, w // 4), size=w).astype(np.int64)
+        p, x = prev_next_occurrence(addrs)
+        prevs.append(np.where(p >= 0, p + b * w, -1))
+        nxts.append(np.minimum(x, w) + b * w)
+        occs.append((rng.random(w) < 0.7).astype(np.int32))
+    prev, nxt = np.concatenate(prevs), np.concatenate(nxts)
+    occ = np.concatenate(occs)
+    out = cache_sim_segments_scan(jnp.asarray(prev, jnp.int32),
+                                  jnp.asarray(nxt, jnp.int32),
+                                  jnp.asarray(occ), seg_width=w,
+                                  tile=tile, interpret=True)
+    ref = cache_sim_segments_ref(jnp.asarray(prev, jnp.int32),
+                                 jnp.asarray(nxt, jnp.int32),
+                                 jnp.asarray(occ), w)
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("n,tile", [(64, 16), (200, 64)])
+@slow_sweep
+def test_live_count_scan_sweep(n, tile):
+    """RO live-count kernel vs the dense (i, j)-plane oracle (interpret)."""
+    rng = np.random.default_rng(n)
+    addrs = rng.integers(0, 30, n).astype(np.int64)
+    from repro.core.trace import prev_next_occurrence
+    _, nxt = prev_next_occurrence(addrs)
+    nxt = np.minimum(nxt, n)
+    occ = (rng.random(n) < 0.6).astype(np.int32)
+    out = live_count_scan(jnp.asarray(nxt, jnp.int32),
+                          jnp.asarray(occ), tile=tile, interpret=True)
+    ref = live_counts_ref(jnp.asarray(nxt, jnp.int32), jnp.asarray(occ))
+    assert jnp.array_equal(out, ref)
+
+
+@pytest.mark.parametrize("n,tile", [(64, 16), (257, 64)])
+@slow_sweep
+def test_cache_sim_levels_scan_sweep(n, tile):
+    """Two-level residency-mask kernel vs the jnp oracle (interpret)."""
+    rng = np.random.default_rng(n)
+    addrs = rng.integers(0, max(4, n // 6), size=n).astype(np.int64)
+    from repro.core.trace import prev_next_occurrence
+    prev, nxt = prev_next_occurrence(addrs)
+    occ = (rng.random(n) < 0.7).astype(np.int32)
+    cap1 = rng.integers(0, 6, n).astype(np.int32)
+    captot = cap1 + rng.integers(0, 6, n).astype(np.int32)
+    l1, un = cache_sim_levels_scan(jnp.asarray(prev, jnp.int32),
+                                   jnp.asarray(nxt, jnp.int32),
+                                   jnp.asarray(occ), jnp.asarray(cap1),
+                                   jnp.asarray(captot), tile=tile,
+                                   interpret=True)
+    r1, ru = cache_sim_levels_ref(jnp.asarray(prev, jnp.int32),
+                                  jnp.asarray(nxt, jnp.int32),
+                                  jnp.asarray(occ), jnp.asarray(cap1),
+                                  jnp.asarray(captot))
+    assert jnp.array_equal(l1, r1) and jnp.array_equal(un, ru)
 
 
 def test_ops_wrappers_dispatch_cpu():

@@ -90,6 +90,19 @@ def test_fused_monitor_short_precomputed_list():
         assert np.array_equal(a.curves[k].heights, b.curves[k].heights)
 
 
+def test_validate_flag_off_by_default_and_bit_identical():
+    """``validate=True`` only adds the ingest pre-check: every Monitor
+    output is bit-identical to the default (off) path."""
+    traces = _rand_traces(3)
+    a = analyze_windows(traces, "urd")
+    b = analyze_windows(traces, "urd", validate=True)
+    assert np.array_equal(a.urd_sizes, b.urd_sizes)
+    assert np.array_equal(a.write_ratios, b.write_ratios)
+    for k in range(len(traces)):
+        assert np.array_equal(a.curves[k].edges, b.curves[k].edges)
+        assert np.array_equal(a.curves[k].heights, b.curves[k].heights)
+
+
 def test_shards_keep_mask_rate_near_one():
     """rate within 2**-32 of 1.0 must keep everything, not overflow."""
     a = np.arange(500, dtype=np.int64)

@@ -1,0 +1,11 @@
+"""repro-lint: AST invariant checker for the repo's reproduction contracts.
+
+Usage: ``python -m tools.repro_lint src tests benchmarks`` (exit 1 on any
+unsuppressed finding).  Library entry point: :func:`lint_paths`.
+"""
+from tools.repro_lint.engine import (REGISTRY, Context, Finding,
+                                     LintResult, Module, Rule, lint_paths)
+from tools.repro_lint import rules as _rules  # noqa: F401  (populates REGISTRY)
+
+__all__ = ["REGISTRY", "Context", "Finding", "LintResult", "Module",
+           "Rule", "lint_paths"]

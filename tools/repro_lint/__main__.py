@@ -1,0 +1,3 @@
+from tools.repro_lint.cli import main
+
+raise SystemExit(main())

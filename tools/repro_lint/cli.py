@@ -1,0 +1,67 @@
+"""Command-line front end: ``python -m tools.repro_lint src tests benchmarks``."""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from tools.repro_lint import rules  # noqa: F401  (populates REGISTRY)
+from tools.repro_lint.engine import (REGISTRY, Context, LintResult,
+                                     load_modules, run_rules)
+
+
+def list_rules() -> str:
+    lines = []
+    for rid in sorted(REGISTRY):
+        r = REGISTRY[rid]
+        lines.append(f"{r.id} {r.name}: {r.summary}")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint",
+        description="AST invariant checker for the repo's reproduction "
+                    "contracts (device purity, oracle pairing, flag and "
+                    "telemetry discipline).")
+    ap.add_argument("paths", nargs="*",
+                    default=["src", "tests", "benchmarks"],
+                    help="files or directories to lint (default: "
+                         "src tests benchmarks)")
+    ap.add_argument("--root", default=".",
+                    help="root that reported paths are relative to")
+    ap.add_argument("--select", action="append", metavar="RL00x",
+                    help="run only these rule ids (repeatable)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--show-suppressed", action="store_true",
+                    help="also print findings silenced by "
+                         "'# repro-lint: disable=...' comments")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        print(list_rules())
+        return 0
+
+    ctx = Context(load_modules(args.paths, root=pathlib.Path(args.root)))
+    res: LintResult = run_rules(ctx, select=args.select)
+
+    if args.as_json:
+        print(json.dumps(res.to_json(), indent=2))
+    else:
+        for f in res.findings:
+            print(f.render())
+        if args.show_suppressed:
+            for f in res.suppressed:
+                print(f"{f.render()}  [suppressed]")
+        status = "clean" if res.ok else f"{len(res.findings)} finding(s)"
+        print(f"repro-lint: {res.n_files} files, {status}, "
+              f"{len(res.suppressed)} suppressed", file=sys.stderr)
+    return 0 if res.ok else 1
+
+
+if __name__ == "__main__":  # pragma: no cover
+    raise SystemExit(main())

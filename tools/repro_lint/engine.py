@@ -1,0 +1,245 @@
+"""repro-lint core: module loading, rule registry, suppressions, reporting.
+
+The checker is a plain ``ast`` pass (stdlib only, no runtime imports of the
+linted code): every file is parsed once into a :class:`Module`, all parsed
+modules form a :class:`Context`, and each registered :class:`Rule` walks
+whatever slice of that context its contract concerns.  Rules may be
+cross-file (the kernel-triad rule pairs ``kernel.py`` against ``ref.py``
+and the test corpus; the flag/counter rules grep the test corpus for the
+names they police) — which is exactly what a per-file linter like ruff
+cannot express and why this pass exists.
+
+Suppressions: ``# repro-lint: disable=RL001`` (or a comma list) on the
+flagged line, or on a comment-only line immediately above it, silences
+those rule ids for that line.  Suppressed findings are counted but do not
+fail the run; the CLI can print them with ``--show-suppressed``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+
+_SUPPRESS_RE = re.compile(r"#\s*repro-lint:\s*disable=([A-Z0-9,\s]+)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str           # path as reported (relative to the lint root)
+    line: int
+    col: int
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class Module:
+    """One parsed source file plus the lazy per-module analyses."""
+
+    def __init__(self, path: pathlib.Path, rel: str, source: str):
+        self.path = path
+        self.rel = rel.replace("\\", "/")
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        self._suppressions: dict[int, set[str]] | None = None
+        self._parents: dict[ast.AST, ast.AST] | None = None
+
+    # ---------------------------------------------------------- suppressions
+    @property
+    def suppressions(self) -> dict[int, set[str]]:
+        """line number -> rule ids disabled on that line."""
+        if self._suppressions is None:
+            sup: dict[int, set[str]] = {}
+            code_lines: set[int] = set()
+            try:
+                toks = list(tokenize.generate_tokens(
+                    io.StringIO(self.source).readline))
+            except tokenize.TokenError:
+                toks = []
+            for tok in toks:
+                if tok.type == tokenize.COMMENT:
+                    m = _SUPPRESS_RE.search(tok.string)
+                    if m:
+                        ids = {s.strip() for s in m.group(1).split(",")
+                               if s.strip()}
+                        sup.setdefault(tok.start[0], set()).update(ids)
+                elif tok.type not in (tokenize.NL, tokenize.NEWLINE,
+                                      tokenize.INDENT, tokenize.DEDENT,
+                                      tokenize.ENCODING,
+                                      tokenize.ENDMARKER):
+                    code_lines.add(tok.start[0])
+            # a comment-only suppression line also covers the next line
+            for ln in list(sup):
+                if ln not in code_lines:
+                    sup.setdefault(ln + 1, set()).update(sup[ln])
+            self._suppressions = sup
+        return self._suppressions
+
+    def suppressed(self, rule_id: str, line: int) -> bool:
+        return rule_id in self.suppressions.get(line, ())
+
+    # --------------------------------------------------------------- parents
+    @property
+    def parents(self) -> dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            self._parents = {}
+            for node in ast.walk(self.tree):
+                for child in ast.iter_child_nodes(node):
+                    self._parents[child] = node
+        return self._parents
+
+    def matches(self, *patterns: str) -> bool:
+        """Right-anchored path match (``kernels/*/ops.py`` style)."""
+        p = pathlib.PurePosixPath(self.rel)
+        return any(p.match(pat) for pat in patterns)
+
+
+DEFAULT_CONFIG: dict = {
+    # RL001: modules whose traced functions must stay host-sync free
+    "device_modules": ("core/device_pipeline.py", "kernels/*/ops.py",
+                       "kernels/*/kernel.py", "kernels/*/ref.py"),
+    # RL002: kernel packages follow the ops/ref/differential-test triad
+    "kernel_modules": ("kernels/*/kernel.py",),
+    # RL003: functions whose new flags must default off / to the host value
+    "flag_functions": ("ECICacheManager.__init__", "analyze_windows",
+                       "simulate_many", "greedy_allocate",
+                       "DeviceWindowPipeline.__init__"),
+    # RL003: enum-valued kwargs and their required conservative default
+    "enum_defaults": {"pipeline": "host", "engine": "batch"},
+    # RL004: name components that mark an int attribute as telemetry
+    "counter_vocab": ("windows", "events", "stepdowns", "quarantines",
+                      "retries", "decisions", "failures", "loss",
+                      "violations", "fallback", "poisoned", "straggler"),
+}
+
+
+class Context:
+    """Everything a rule may look at: all parsed modules + config."""
+
+    def __init__(self, modules: list[Module], config: dict | None = None):
+        self.modules = modules
+        self.config = dict(DEFAULT_CONFIG)
+        if config:
+            self.config.update(config)
+        self._tests_corpus: str | None = None
+
+    @property
+    def test_modules(self) -> list[Module]:
+        return [m for m in self.modules
+                if pathlib.PurePosixPath(m.rel).name.startswith("test_")]
+
+    @property
+    def tests_corpus(self) -> str | None:
+        """Concatenated test sources, or None when no tests were linted
+        (cross-file checks against the test corpus are skipped then)."""
+        if self._tests_corpus is None:
+            tests = self.test_modules
+            self._tests_corpus = ("\n".join(t.source for t in tests)
+                                  if tests else "")
+        return self._tests_corpus or None
+
+    def named_in_tests(self, name: str) -> bool:
+        corpus = self.tests_corpus
+        return corpus is not None and \
+            re.search(rf"\b{re.escape(name)}\b", corpus) is not None
+
+
+class Rule:
+    """Base class; subclasses set id/name/summary and implement run()."""
+
+    id: str = ""
+    name: str = ""
+    summary: str = ""
+
+    def run(self, ctx: Context) -> list[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+REGISTRY: dict[str, Rule] = {}
+
+
+def register(cls: type[Rule]) -> type[Rule]:
+    REGISTRY[cls.id] = cls()
+    return cls
+
+
+# ------------------------------------------------------------------ running
+def collect_files(paths: list[str | pathlib.Path]) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for p in paths:
+        p = pathlib.Path(p)
+        if p.is_dir():
+            out.extend(sorted(f for f in p.rglob("*.py")
+                              if "__pycache__" not in f.parts
+                              and not any(part.startswith(".")
+                                          for part in f.parts)))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def load_modules(paths: list[str | pathlib.Path],
+                 root: pathlib.Path | None = None) -> list[Module]:
+    root = pathlib.Path(root) if root is not None else pathlib.Path.cwd()
+    mods = []
+    for f in collect_files(paths):
+        try:
+            rel = str(f.resolve().relative_to(root.resolve()))
+        except ValueError:
+            rel = str(f)
+        mods.append(Module(f, rel, f.read_text()))
+    return mods
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding]
+    suppressed: list[Finding]
+    n_files: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def to_json(self) -> dict:
+        return {"ok": self.ok, "files": self.n_files,
+                "findings": [f.to_json() for f in self.findings],
+                "suppressed": [f.to_json() for f in self.suppressed]}
+
+
+def run_rules(ctx: Context,
+              select: list[str] | None = None) -> LintResult:
+    by_rel = {m.rel: m for m in ctx.modules}
+    active, suppressed = [], []
+    for rid in sorted(REGISTRY):
+        if select and rid not in select:
+            continue
+        for f in REGISTRY[rid].run(ctx):
+            mod = by_rel.get(f.path)
+            if mod is not None and mod.suppressed(f.rule, f.line):
+                suppressed.append(f)
+            else:
+                active.append(f)
+    key = (lambda f: (f.path, f.line, f.col, f.rule))
+    return LintResult(sorted(active, key=key), sorted(suppressed, key=key),
+                      len(ctx.modules))
+
+
+def lint_paths(paths: list[str | pathlib.Path],
+               root: pathlib.Path | None = None,
+               config: dict | None = None,
+               select: list[str] | None = None) -> LintResult:
+    """Parse ``paths`` recursively and run every registered rule."""
+    from tools.repro_lint import rules  # noqa: F401  (registers the rules)
+    return run_rules(Context(load_modules(paths, root=root), config),
+                     select=select)

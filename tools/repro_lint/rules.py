@@ -1,0 +1,853 @@
+"""The repro-lint rule set (RL001–RL006).
+
+Each rule mechanizes one of the repo's standing reproduction contracts —
+see ``tools/repro_lint/README.md`` for the catalog with rationale,
+examples and suppression guidance.  Rules are cross-file by design: they
+see every linted module at once (:class:`~tools.repro_lint.engine.Context`)
+so they can pair ``kernel.py`` against ``ref.py``, trace jit reachability
+across modules, and require that flags/counters are exercised by name in
+the test corpus.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+
+from tools.repro_lint.engine import (Context, Finding, Module, Rule,
+                                     register)
+
+# --------------------------------------------------------------------------
+# shared AST helpers
+# --------------------------------------------------------------------------
+
+_JAX_MODULE_HINTS = ("jax", "lax", "jnp", "pl", "plgpu", "pltpu")
+
+# transform/control-flow entry points and the positional index of every
+# argument that becomes a traced callable
+_TRACE_BODY_ARGS: dict[str, tuple[int, ...]] = {
+    "jit": (0,), "vmap": (0,), "pmap": (0,), "grad": (0,),
+    "value_and_grad": (0,), "checkpoint": (0,), "remat": (0,),
+    "fori_loop": (2,), "scan": (0,), "while_loop": (0, 1),
+    "cond": (1, 2), "switch": (1,), "map": (0,),
+    "associative_scan": (0,), "pallas_call": (0,),
+}
+_TRACE_BODY_KWARGS = ("fun", "f", "body_fun", "cond_fun", "true_fun",
+                      "false_fun", "kernel")
+_LOOP_APIS = ("fori_loop", "scan", "while_loop", "map", "cond", "switch",
+              "associative_scan")
+_JIT_DECORATORS = ("jit", "vmap", "checkpoint", "remat", "custom_jvp",
+                   "custom_vjp", "pallas_call")
+
+_SANITIZER_ATTRS = {"shape", "dtype", "ndim", "size", "sharding",
+                    "weak_type", "aval"}
+_SYNC_METHODS = {"item", "tolist", "numpy", "copy_to_host"}
+_SYNC_BUILTINS = {"float", "int", "bool", "complex"}
+_MUTATOR_METHODS = {"append", "extend", "insert", "remove", "pop",
+                    "popitem", "clear", "update", "setdefault", "add",
+                    "discard", "appendleft", "extendleft"}
+
+
+def _dotted(e: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    if isinstance(e, ast.Name):
+        return e.id
+    if isinstance(e, ast.Attribute):
+        base = _dotted(e.value)
+        return f"{base}.{e.attr}" if base else None
+    return None
+
+
+def _root_name(e: ast.AST) -> str | None:
+    """Leftmost Name of an attribute/subscript/call chain."""
+    while isinstance(e, (ast.Attribute, ast.Subscript, ast.Call)):
+        e = e.func if isinstance(e, ast.Call) else e.value
+    return e.id if isinstance(e, ast.Name) else None
+
+
+class _Aliases:
+    """What this module's imports bind: numpy names, jax-ish names."""
+
+    def __init__(self, mod: Module):
+        self.np_mods: set[str] = set()     # names bound to the numpy module
+        self.np_funcs: set[str] = set()    # names imported from numpy
+        self.jax_mods: set[str] = set(_JAX_MODULE_HINTS)
+        self.jax_funcs: set[str] = set()   # from jax[...] import jit, ...
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    bound = a.asname or a.name.split(".")[0]
+                    if a.name.split(".")[0] == "numpy":
+                        self.np_mods.add(bound)
+                    elif a.name.split(".")[0] == "jax":
+                        self.jax_mods.add(a.asname or a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                top = node.module.split(".")[0]
+                for a in node.names:
+                    bound = a.asname or a.name
+                    if top == "numpy":
+                        self.np_funcs.add(bound)
+                    elif top == "jax":
+                        # submodule import (lax, numpy as jnp, pallas as pl)
+                        # vs function import (jit, vmap, ...)
+                        if a.name in _TRACE_BODY_ARGS or \
+                                a.name == "enable_x64":
+                            self.jax_funcs.add(bound)
+                        else:
+                            self.jax_mods.add(bound)
+
+    def is_numpy_call(self, func: ast.AST) -> bool:
+        d = _dotted(func)
+        if not d:
+            return False
+        parts = d.split(".")
+        return parts[0] in self.np_mods or \
+            (len(parts) == 1 and parts[0] in self.np_funcs)
+
+    def is_jaxish(self, func: ast.AST) -> bool:
+        d = _dotted(func)
+        return bool(d) and d.split(".")[0] in self.jax_mods
+
+
+def _trace_entry(call: ast.Call, al: _Aliases) -> tuple[str, list[ast.AST]]:
+    """('jit', [body exprs]) when ``call`` is a jax trace entry, else ('', [])."""
+    d = _dotted(call.func)
+    if not d:
+        return "", []
+    parts = d.split(".")
+    api = parts[-1]
+    if api not in _TRACE_BODY_ARGS:
+        return "", []
+    rooted = len(parts) > 1 and parts[0] in al.jax_mods
+    bare = len(parts) == 1 and parts[0] in al.jax_funcs
+    if not (rooted or bare):
+        return "", []
+    bodies: list[ast.AST] = []
+    for i in _TRACE_BODY_ARGS[api]:
+        if i < len(call.args):
+            a = call.args[i]
+            if api == "switch" and isinstance(a, (ast.List, ast.Tuple)):
+                bodies.extend(a.elts)
+            else:
+                bodies.append(a)
+    bodies.extend(kw.value for kw in call.keywords
+                  if kw.arg in _TRACE_BODY_KWARGS)
+    return api, bodies
+
+
+class _Scopes:
+    """name -> FunctionDef/Lambda resolution along the enclosing-scope chain."""
+
+    def __init__(self, mod: Module):
+        self.mod = mod
+        # owner scope (nearest enclosing function or the module) of each def
+        self.by_scope: dict[ast.AST, dict[str, ast.AST]] = {}
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.by_scope.setdefault(self._owner(node), {})[node.name] \
+                    = node
+            elif isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Lambda):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        self.by_scope.setdefault(self._owner(node), {})[
+                            t.id] = node.value
+
+    def _owner(self, node: ast.AST) -> ast.AST:
+        p = self.mod.parents.get(node)
+        while p is not None and not isinstance(
+                p, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Module)):
+            p = self.mod.parents.get(p)
+        return p if p is not None else self.mod.tree
+
+    def resolve(self, name: str, at: ast.AST) -> ast.AST | None:
+        scope = self._owner(at)
+        while scope is not None:
+            hit = self.by_scope.get(scope, {}).get(name)
+            if hit is not None:
+                return hit
+            if isinstance(scope, ast.Module):
+                return None
+            scope = self._owner(scope)
+        return None
+
+    def returned_defs(self, factory: ast.AST) -> list[ast.AST]:
+        """Inner defs a factory function returns (``jax.jit(_make(...))``)."""
+        if not isinstance(factory, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return []
+        inner = {n.name: n for n in ast.walk(factory)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and n is not factory}
+        out = []
+        for node in ast.walk(factory):
+            if isinstance(node, ast.Return) and node.value is not None:
+                if isinstance(node.value, ast.Name) and \
+                        node.value.id in inner:
+                    out.append(inner[node.value.id])
+                elif isinstance(node.value, ast.Lambda):
+                    out.append(node.value)
+        return out
+
+
+def _resolve_body(expr: ast.AST, scopes: _Scopes) -> list[ast.AST]:
+    """Function nodes a trace-entry body argument may denote."""
+    if isinstance(expr, ast.Lambda):
+        return [expr]
+    if isinstance(expr, ast.Name):
+        hit = scopes.resolve(expr.id, expr)
+        return [hit] if hit is not None else []
+    if isinstance(expr, ast.Call):
+        d = _dotted(expr.func) or ""
+        if d.split(".")[-1] == "partial" and expr.args:
+            return _resolve_body(expr.args[0], scopes)
+        # factory pattern: jax.jit(_make_walk(...)) traces what it returns
+        if isinstance(expr.func, ast.Name):
+            fac = scopes.resolve(expr.func.id, expr)
+            if fac is not None:
+                return scopes.returned_defs(fac)
+    return []
+
+
+def _fn_params(fn: ast.AST) -> set[str]:
+    a = fn.args
+    names = [p.arg for p in
+             (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def _own_statements(fn: ast.AST):
+    """Walk fn's nodes without descending into nested function defs."""
+    stack = list(fn.body) if not isinstance(fn, ast.Lambda) else [fn.body]
+    while stack:
+        node = stack.pop()
+        yield node
+        for child in ast.iter_child_nodes(node):
+            if not isinstance(child, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef, ast.Lambda)):
+                stack.append(child)
+
+
+def _store_names(target: ast.AST) -> list[str]:
+    return [n.id for n in ast.walk(target)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Store)]
+
+
+# --------------------------------------------------------------------------
+# RL001 — host syncs inside jit-traced code
+# --------------------------------------------------------------------------
+
+def _ordered_params(fn: ast.AST) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def _static_param_names(keywords, fn: ast.AST) -> set[str]:
+    """Params pinned static by static_argnames/static_argnums keywords."""
+    out: set[str] = set()
+    pos = _ordered_params(fn)
+    for kw in keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            elts = ([v] if isinstance(v, ast.Constant)
+                    else v.elts if isinstance(v, (ast.Tuple, ast.List))
+                    else [])
+            out.update(e.value for e in elts
+                       if isinstance(e, ast.Constant)
+                       and isinstance(e.value, str))
+        elif kw.arg == "static_argnums":
+            v = kw.value
+            elts = ([v] if isinstance(v, ast.Constant)
+                    else v.elts if isinstance(v, (ast.Tuple, ast.List))
+                    else [])
+            for e in elts:
+                if isinstance(e, ast.Constant) and \
+                        isinstance(e.value, int) and e.value < len(pos):
+                    out.add(pos[e.value])
+    return out
+
+
+class _Taint:
+    """Forward may-be-traced analysis over one device function body."""
+
+    def __init__(self, fn: ast.AST, al: _Aliases,
+                 tainted: set[str] | None = None):
+        self.al = al
+        self.tainted = (set(tainted) if tainted is not None
+                        else _fn_params(fn))
+        # two forward passes over the assignments reach a fixpoint for
+        # straight-line and loop-carried locals alike
+        for _ in range(2):
+            for node in _own_statements(fn):
+                if isinstance(node, (ast.Assign, ast.AnnAssign,
+                                     ast.AugAssign)):
+                    value = node.value
+                    targets = (node.targets
+                               if isinstance(node, ast.Assign)
+                               else [node.target])
+                    if value is not None and self.expr(value):
+                        for t in targets:
+                            self.tainted.update(_store_names(t))
+                elif isinstance(node, ast.For) and self.expr(node.iter):
+                    self.tainted.update(_store_names(node.target))
+
+    def expr(self, e: ast.AST) -> bool:
+        if isinstance(e, ast.Name):
+            return e.id in self.tainted
+        if isinstance(e, ast.Attribute):
+            if e.attr in _SANITIZER_ATTRS:
+                return False
+            return self.expr(e.value)
+        if isinstance(e, ast.Call):
+            d = _dotted(e.func) or ""
+            if d in ("len", "range", "enumerate", "isinstance", "print"):
+                return False
+            if self.al.is_jaxish(e.func):
+                return True          # jnp/lax results are traced values
+            if self.al.is_numpy_call(e.func):
+                return False         # numpy results are host values
+            return (any(self.expr(a) for a in e.args)
+                    or any(self.expr(k.value) for k in e.keywords)
+                    or self.expr(e.func))
+        if isinstance(e, (ast.BinOp, ast.BoolOp, ast.UnaryOp, ast.Compare,
+                          ast.Subscript, ast.IfExp, ast.Tuple, ast.List,
+                          ast.Starred, ast.Slice, ast.FormattedValue,
+                          ast.JoinedStr)):
+            return any(self.expr(c) for c in ast.iter_child_nodes(e)
+                       if isinstance(c, ast.expr))
+        return False
+
+
+@register
+class HostSyncInJit(Rule):
+    id = "RL001"
+    name = "host-sync-in-jit"
+    summary = ("no .item()/float()/np.* host syncs on traced values inside "
+               "functions reachable from jax.jit / lax control flow in "
+               "device-resident modules")
+
+    def run(self, ctx: Context) -> list[Finding]:
+        aliases = {m.rel: _Aliases(m) for m in ctx.modules}
+        scopes = {m.rel: _Scopes(m) for m in ctx.modules}
+        device_mods = [m for m in ctx.modules
+                       if m.matches(*ctx.config["device_modules"])]
+        # top-level defs of device-pattern modules, for cross-module
+        # call-graph propagation (ops.py helpers called from jitted stages)
+        global_defs: dict[str, list[tuple[Module, ast.AST]]] = {}
+        for m in device_mods:
+            for node in m.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    global_defs.setdefault(node.name, []).append((m, node))
+
+        # ---- phase 1: every function node handed to a trace entry.
+        # Taint is tracked per parameter so static_argnames (trace-time
+        # Python values like tile widths) never count as traced.
+        fn_taint: dict[tuple[str, ast.AST], set[str]] = {}
+        queue: list[tuple[Module, ast.AST]] = []
+
+        def mark(m: Module, fn: ast.AST,
+                 tainted: set[str] | None = None) -> None:
+            new = _fn_params(fn) if tainted is None else set(tainted)
+            key = (m.rel, fn)
+            cur = fn_taint.get(key)
+            if cur is None:
+                fn_taint[key] = new
+                queue.append((m, fn))
+            elif not new <= cur:
+                cur |= new
+                queue.append((m, fn))
+
+        for m in ctx.modules:
+            al, sc = aliases[m.rel], scopes[m.rel]
+            for node in ast.walk(m.tree):
+                if isinstance(node, ast.Call):
+                    api, bodies = _trace_entry(node, al)
+                    if api:
+                        for b in bodies:
+                            for fn in _resolve_body(b, sc):
+                                static = _static_param_names(
+                                    node.keywords, fn)
+                                mark(m, fn, _fn_params(fn) - static)
+                elif isinstance(node, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef)):
+                    for dec in node.decorator_list:
+                        target = dec.func if isinstance(dec, ast.Call) \
+                            else dec
+                        d = _dotted(target) or ""
+                        if d.split(".")[-1] == "partial" and \
+                                isinstance(dec, ast.Call) and dec.args:
+                            d = _dotted(dec.args[0]) or ""
+                        if d.split(".")[-1] in _JIT_DECORATORS and (
+                                d.split(".")[0] in al.jax_mods
+                                or d in _JIT_DECORATORS):
+                            static = (_static_param_names(
+                                dec.keywords, node)
+                                if isinstance(dec, ast.Call) else set())
+                            mark(m, node, _fn_params(node) - static)
+
+        # ---- phase 2: taint each device function; propagate through
+        # calls that receive traced arguments; flag host syncs
+        found: dict[tuple, Finding] = {}
+        while queue:
+            m, fn = queue.pop()
+            al, sc = aliases[m.rel], scopes[m.rel]
+            taint = _Taint(fn, al, fn_taint[(m.rel, fn)])
+            report = m.matches(*ctx.config["device_modules"])
+            for node in _own_statements(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                hit = None
+                func = node.func
+                if isinstance(func, ast.Attribute) and \
+                        func.attr in _SYNC_METHODS and \
+                        taint.expr(func.value):
+                    hit = (f".{func.attr}() forces a device->host sync on "
+                           f"a traced value inside a jit-traced function")
+                elif isinstance(func, ast.Name) and \
+                        func.id in _SYNC_BUILTINS and \
+                        any(taint.expr(a) for a in node.args):
+                    hit = (f"{func.id}() concretizes a traced value "
+                           f"(host sync) inside a jit-traced function")
+                elif al.is_numpy_call(func) and (
+                        any(taint.expr(a) for a in node.args)
+                        or any(taint.expr(k.value)
+                               for k in node.keywords)):
+                    hit = (f"numpy call {_dotted(func)}() on a traced "
+                           f"value forces a host sync inside a "
+                           f"jit-traced function")
+                elif (_dotted(func) or "").split(".")[-1] == \
+                        "device_get" and \
+                        any(taint.expr(a) for a in node.args):
+                    hit = ("jax.device_get() inside a jit-traced function "
+                           "is a host sync; fetch after dispatch instead")
+                if hit and report:
+                    f = Finding(self.id, m.rel, node.lineno,
+                                node.col_offset, hit)
+                    found[(f.path, f.line, f.col, f.message)] = f
+                if hit:
+                    continue
+                # propagation: traced values flowing into a local or
+                # device-module function make its body device-resident —
+                # only the parameters actually receiving traced values
+                # become tainted (static widths/flags stay host values)
+                args_tainted = (any(taint.expr(a) for a in node.args)
+                                or any(taint.expr(k.value)
+                                       for k in node.keywords))
+                if not args_tainted:
+                    continue
+                callees: list[tuple[Module, ast.AST]] = []
+                if isinstance(func, ast.Name):
+                    local_callee = sc.resolve(func.id, node)
+                    if local_callee is not None:
+                        callees.append((m, local_callee))
+                if not callees:
+                    name = (_dotted(func) or "").split(".")[-1]
+                    callees.extend(global_defs.get(name, ()))
+                for cm, cfn in callees:
+                    mark(cm, cfn, self._call_site_taint(node, cfn, taint))
+        return list(found.values())
+
+    @staticmethod
+    def _call_site_taint(call: ast.Call, callee: ast.AST,
+                         taint: "_Taint") -> set[str]:
+        """Callee params that receive traced values at this call site."""
+        pos = _ordered_params(callee)
+        out: set[str] = set()
+        for i, a in enumerate(call.args):
+            if isinstance(a, ast.Starred):
+                return _fn_params(callee)       # can't track the unpack
+            if taint.expr(a) and i < len(pos):
+                out.add(pos[i])
+        for kw in call.keywords:
+            if taint.expr(kw.value):
+                if kw.arg is None:              # **kwargs splat
+                    return _fn_params(callee)
+                out.add(kw.arg)
+        return out
+
+
+# --------------------------------------------------------------------------
+# RL002 — kernel / ref-oracle / differential-test triad
+# --------------------------------------------------------------------------
+
+def _public_symbols(mod: Module) -> list[tuple[str, int]]:
+    """(name, line) of the module's public API (__all__ wins)."""
+    def_lines = {n.name: n.lineno for n in mod.tree.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef))}
+    for node in mod.tree.body:
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__all__"
+                for t in node.targets):
+            if isinstance(node.value, (ast.List, ast.Tuple)):
+                return [(e.value, def_lines.get(e.value, node.lineno))
+                        for e in node.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, str)]
+    return [(n, ln) for n, ln in def_lines.items()
+            if not n.startswith("_")]
+
+
+_KERNEL_SUFFIXES = ("_scan", "_kernel", "_op", "_device")
+
+
+def _pair_ref(kernel_name: str, ref_names: list[str]) -> str | None:
+    """Best ref.py oracle for a kernel symbol, by normalized-name overlap."""
+    nk = kernel_name
+    for suf in _KERNEL_SUFFIXES:
+        if nk.endswith(suf):
+            nk = nk[: -len(suf)]
+            break
+    best, best_score = None, None
+    for r in ref_names:
+        nr = r[:-4] if r.endswith("_ref") else r
+        cands = [(a, b) for a in (kernel_name, nk) for b in (nr,)]
+        if not any(a == b or a in b or b in a for a, b in cands):
+            continue
+        score = (0 if nk == nr or kernel_name == nr else 1,
+                 abs(len(nr) - len(nk)))
+        if best_score is None or score < best_score:
+            best, best_score = r, score
+    return best
+
+
+@register
+class KernelTriad(Rule):
+    id = "RL002"
+    name = "kernel-triad"
+    summary = ("every kernels/<name>/kernel.py public symbol needs a "
+               "matching ref.py oracle and a test importing both")
+
+    def run(self, ctx: Context) -> list[Finding]:
+        by_rel = {m.rel: m for m in ctx.modules}
+        findings = []
+        for kmod in ctx.modules:
+            if not kmod.matches(*ctx.config["kernel_modules"]):
+                continue
+            pkg = str(pathlib.PurePosixPath(kmod.rel).parent)
+            ref = by_rel.get(f"{pkg}/ref.py")
+            if ref is None:
+                findings.append(Finding(
+                    self.id, kmod.rel, 1, 0,
+                    f"kernel package {pkg} has no ref.py oracle module"))
+                continue
+            ref_names = [n for n, _ in _public_symbols(ref)]
+            for name, line in _public_symbols(kmod):
+                mate = _pair_ref(name, ref_names)
+                if mate is None:
+                    findings.append(Finding(
+                        self.id, kmod.rel, line, 0,
+                        f"kernel symbol {name!r} has no matching oracle "
+                        f"in {pkg}/ref.py (expected a *_ref counterpart)"))
+                    continue
+                tests = ctx.test_modules
+                if tests and not any(
+                        t.source.find(name) != -1
+                        and t.source.find(mate) != -1 for t in tests):
+                    findings.append(Finding(
+                        self.id, kmod.rel, line, 0,
+                        f"no single test module references both kernel "
+                        f"{name!r} and its oracle {mate!r} (differential "
+                        f"coverage required)"))
+        return findings
+
+
+# --------------------------------------------------------------------------
+# RL003 — feature flags default off / to the host value, and are tested
+# --------------------------------------------------------------------------
+
+def _kwarg_defaults(fn: ast.AST):
+    """(arg, default) pairs for every defaulted parameter."""
+    a = fn.args
+    pos = [*a.posonlyargs, *a.args]
+    for arg, dflt in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        yield arg, dflt
+    for arg, dflt in zip(a.kwonlyargs, a.kw_defaults):
+        if dflt is not None:
+            yield arg, dflt
+
+
+@register
+class DefaultOffFlags(Rule):
+    id = "RL003"
+    name = "default-off-flags"
+    summary = ("bool/enum kwargs on the contract surfaces must default to "
+               "the off/host value and be named in a bit-identity test")
+
+    def run(self, ctx: Context) -> list[Finding]:
+        targets = set(ctx.config["flag_functions"])
+        enum_defaults: dict = ctx.config["enum_defaults"]
+        findings = []
+        for m in ctx.modules:
+            for fn, qual in self._targets(m, targets):
+                for arg, dflt in _kwarg_defaults(fn):
+                    if arg.arg == "self":
+                        continue
+                    is_bool = (isinstance(dflt, ast.Constant)
+                               and isinstance(dflt.value, bool))
+                    is_enum = arg.arg in enum_defaults
+                    if not (is_bool or is_enum):
+                        continue
+                    if is_bool and dflt.value is not False:
+                        findings.append(Finding(
+                            self.id, m.rel, arg.lineno, arg.col_offset,
+                            f"flag {arg.arg!r} on {qual} must default to "
+                            f"False (features ship off; the on-path is "
+                            f"opt-in)"))
+                    if is_enum and not (
+                            isinstance(dflt, ast.Constant)
+                            and dflt.value == enum_defaults[arg.arg]):
+                        findings.append(Finding(
+                            self.id, m.rel, arg.lineno, arg.col_offset,
+                            f"enum kwarg {arg.arg!r} on {qual} must "
+                            f"default to {enum_defaults[arg.arg]!r} "
+                            f"(the host/reference engine)"))
+                    if ctx.tests_corpus is not None and \
+                            not ctx.named_in_tests(arg.arg):
+                        findings.append(Finding(
+                            self.id, m.rel, arg.lineno, arg.col_offset,
+                            f"flag {arg.arg!r} on {qual} is not named in "
+                            f"any test (a bit-identity test must pin the "
+                            f"off-path)"))
+        return findings
+
+    @staticmethod
+    def _targets(m: Module, targets: set[str]):
+        for node in m.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in targets:
+                yield node, node.name
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)) and \
+                            f"{node.name}.{sub.name}" in targets:
+                        yield sub, f"{node.name}.{sub.name}"
+
+
+# --------------------------------------------------------------------------
+# RL004 — telemetry counters reach summary() and a test assertion
+# --------------------------------------------------------------------------
+
+@register
+class CounterRegistration(Rule):
+    id = "RL004"
+    name = "counter-registration"
+    summary = ("telemetry counters incremented on a summary()-bearing "
+               "class must appear in summary() and a test assertion")
+
+    def run(self, ctx: Context) -> list[Finding]:
+        vocab = ctx.config["counter_vocab"]
+        findings = []
+        for m in ctx.modules:
+            if m in ctx.test_modules:
+                continue
+            for cls in ast.walk(m.tree):
+                if not isinstance(cls, ast.ClassDef):
+                    continue
+                summary_fn = next(
+                    (n for n in cls.body
+                     if isinstance(n, (ast.FunctionDef,
+                                       ast.AsyncFunctionDef))
+                     and n.name == "summary"), None)
+                if summary_fn is None:
+                    continue
+                counters = self._counters(cls, vocab)
+                keys = {k.value for n in ast.walk(summary_fn)
+                        if isinstance(n, ast.Dict)
+                        for k in n.keys
+                        if isinstance(k, ast.Constant)
+                        and isinstance(k.value, str)}
+                for name, line in sorted(self._increments(cls).items()):
+                    if name not in counters:
+                        continue
+                    if name not in keys:
+                        findings.append(Finding(
+                            self.id, m.rel, line, 0,
+                            f"counter {name!r} is incremented but missing "
+                            f"from {cls.name}.summary() (telemetry must "
+                            f"surface)"))
+                    if ctx.tests_corpus is not None and \
+                            not ctx.named_in_tests(name):
+                        findings.append(Finding(
+                            self.id, m.rel, line, 0,
+                            f"counter {name!r} has no test assertion "
+                            f"(an increment test must pin it)"))
+        return findings
+
+    @staticmethod
+    def _counters(cls: ast.ClassDef, vocab) -> set[str]:
+        init = next((n for n in cls.body
+                     if isinstance(n, ast.FunctionDef)
+                     and n.name == "__init__"), None)
+        out: set[str] = set()
+        if init is None:
+            return out
+        for node in ast.walk(init):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Constant) and \
+                    type(node.value.value) is int:
+                for t in node.targets:
+                    if isinstance(t, ast.Attribute) and \
+                            isinstance(t.value, ast.Name) and \
+                            t.value.id == "self" and \
+                            not t.attr.startswith("_") and \
+                            any(tok in t.attr.split("_")
+                                for tok in vocab):
+                        out.add(t.attr)
+        return out
+
+    @staticmethod
+    def _increments(cls: ast.ClassDef) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for node in ast.walk(cls):
+            if isinstance(node, ast.AugAssign) and \
+                    isinstance(node.target, ast.Attribute) and \
+                    isinstance(node.target.value, ast.Name) and \
+                    node.target.value.id == "self":
+                out.setdefault(node.target.attr, node.lineno)
+        return out
+
+
+# --------------------------------------------------------------------------
+# RL005 — x64 stays scoped
+# --------------------------------------------------------------------------
+
+@register
+class X64Scoping(Rule):
+    id = "RL005"
+    name = "x64-scoping"
+    summary = ("enable_x64 only via the scoped context manager; never "
+               "module-level jax.config mutation")
+
+    def run(self, ctx: Context) -> list[Finding]:
+        findings = []
+        for m in ctx.modules:
+            for node in ast.walk(m.tree):
+                if isinstance(node, ast.Call):
+                    d = _dotted(node.func) or ""
+                    if d.endswith(".update") and "config" in d and any(
+                            isinstance(a, ast.Constant)
+                            and isinstance(a.value, str)
+                            and "x64" in a.value
+                            for a in node.args):
+                        findings.append(Finding(
+                            self.id, m.rel, node.lineno, node.col_offset,
+                            "global jax.config x64 mutation leaks into "
+                            "every caller; use the scoped enable_x64 "
+                            "context manager"))
+                    elif d.split(".")[-1] == "enable_x64":
+                        parent = m.parents.get(node)
+                        ok = isinstance(parent, (ast.withitem, ast.Return))
+                        if not ok:
+                            findings.append(Finding(
+                                self.id, m.rel, node.lineno,
+                                node.col_offset,
+                                "enable_x64() must be entered as a scoped "
+                                "context manager (with-block or returned "
+                                "from the _x64 helper), not called for "
+                                "effect"))
+                elif isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        if isinstance(t, ast.Attribute) and \
+                                t.attr == "jax_enable_x64":
+                            findings.append(Finding(
+                                self.id, m.rel, node.lineno,
+                                node.col_offset,
+                                "module-level jax_enable_x64 assignment "
+                                "is a process-global mutation; use the "
+                                "scoped context manager"))
+        return findings
+
+
+# --------------------------------------------------------------------------
+# RL006 — loop-body carry purity
+# --------------------------------------------------------------------------
+
+def _passes_through_at(e: ast.AST) -> bool:
+    """True for jax functional updates: x.at[i].add(v) chains are pure."""
+    while isinstance(e, (ast.Attribute, ast.Subscript, ast.Call)):
+        if isinstance(e, ast.Attribute) and e.attr == "at":
+            return True
+        e = e.func if isinstance(e, ast.Call) else e.value
+    return False
+
+
+@register
+class LoopCarryPurity(Rule):
+    id = "RL006"
+    name = "loop-carry-purity"
+    summary = ("lax.fori_loop / lax.scan bodies must not close over and "
+               "mutate Python state (the double-buffering staleness race)")
+
+    def run(self, ctx: Context) -> list[Finding]:
+        findings = []
+        for m in ctx.modules:
+            if m in ctx.test_modules:
+                continue
+            al, sc = _Aliases(m), _Scopes(m)
+            seen: set[ast.AST] = set()
+            for node in ast.walk(m.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                api, bodies = _trace_entry(node, al)
+                if api not in _LOOP_APIS:
+                    continue
+                for b in bodies:
+                    for fn in _resolve_body(b, sc):
+                        if fn not in seen:
+                            seen.add(fn)
+                            findings.extend(self._check(m, fn, api))
+        return findings
+
+    def _check(self, m: Module, fn: ast.AST, api: str) -> list[Finding]:
+        local = _fn_params(fn)
+        if not isinstance(fn, ast.Lambda):
+            for node in _own_statements(fn):
+                if isinstance(node, (ast.Assign, ast.AugAssign,
+                                     ast.AnnAssign)):
+                    targets = (node.targets if isinstance(node, ast.Assign)
+                               else [node.target])
+                    for t in targets:
+                        if isinstance(t, ast.Name):
+                            local.add(t.id)
+                elif isinstance(node, ast.For):
+                    local.update(_store_names(node.target))
+        out = []
+        for node in _own_statements(fn):
+            if isinstance(node, (ast.Nonlocal, ast.Global)):
+                kind = ("nonlocal" if isinstance(node, ast.Nonlocal)
+                        else "global")
+                out.append(Finding(
+                    self.id, m.rel, node.lineno, node.col_offset,
+                    f"lax.{api} body rebinds enclosing Python state via "
+                    f"{kind} — the body runs at trace time only, so the "
+                    f"mutation is silently stale"))
+            elif isinstance(node, ast.Call) and \
+                    isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in _MUTATOR_METHODS and \
+                    not _passes_through_at(node.func) and \
+                    _root_name(node.func.value) not in local and \
+                    _root_name(node.func.value) is not None:
+                out.append(Finding(
+                    self.id, m.rel, node.lineno, node.col_offset,
+                    f"lax.{api} body mutates closed-over "
+                    f"{_root_name(node.func.value)!r} via "
+                    f".{node.func.attr}() — trace-time-only effect "
+                    f"(silent staleness under double buffering)"))
+            elif isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if isinstance(t, ast.Subscript):
+                        root = _root_name(t.value)
+                        if root is not None and root not in local:
+                            out.append(Finding(
+                                self.id, m.rel, node.lineno,
+                                node.col_offset,
+                                f"lax.{api} body writes into closed-over "
+                                f"container {root!r} — trace-time-only "
+                                f"effect (silent staleness)"))
+        return out
