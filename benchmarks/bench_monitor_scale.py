@@ -21,33 +21,55 @@ on synthetic mixes, four ways:
     ``--profile`` reports the per-stage breakdown (count/curve/
     write_ratio/partition, via staged fenced launches) next to the host
     pipeline's stage times.
+  * ``sharded`` — ``DeviceWindowPipeline(mesh=...)``: the same window
+    program partitioned over the full local ``("shards",)`` mesh
+    (``core.shard_pipeline``) — the warm-up runs under the transfer
+    guard and asserts the ≤1 host sync per window *per mesh* contract.
   * ``sampled`` — ``analyze_windows`` with SHARDS ``sample_rate="auto"``
     + the fast walk: the thousand-tenant default.
 
-Checks: fused ≡ seed allocations at every scale; device ≡ fused
-allocations (bit-identical off TPU; aggregate-latency tolerance on TPU
-f32); ``device_syncs_le_1`` plus ``device_guard_enforced`` (the same
-property under the transfer guard); sampled allocations within 5% aggregate
-latency of exact both on the synthetic mixes and on the Table-3
-workloads (prxy_0/prn_1/hm_1/web_1, default auto-tuner); ≥50×
-seed→sampled speedup at 1024 tenants (full mode only); the
-segment-aligned-padding gate — the **exact fused path must beat the
-per-tenant loop outright**: ``speedup_fused >= 2.0`` at the largest
-tenant count of the run; and, on accelerator hosts, the device-pipeline
-gate ``speedup_device >= 1.5`` over the fused host path there.  All
-engine timings are best-of-reps (single-shot timings flaked the 2.0
-fused gate on noisy boxes).  Results are written to
+Full mode adds the ≥65k-tenant frontier row: sampled-only (the
+per-tenant seed loop would dominate the nightly budget at that scale),
+SHARDS-tuned down to ~64 samples per tenant, host-fused vs sharded-mesh
+decisions — the scale target of the ROADMAP sharding item.
+
+Checks: fused ≡ seed allocations at every scale; device ≡ fused and
+sharded ≡ fused allocations (bit-identical off TPU; aggregate-latency
+tolerance on TPU f32); ``device_syncs_le_1`` plus
+``device_guard_enforced`` (the same property under the transfer guard)
+and ``sharded_syncs_le_mesh`` (≤1 sync per window per mesh); sampled
+allocations within 5% aggregate latency of exact both on the synthetic
+mixes and on the Table-3 workloads (prxy_0/prn_1/hm_1/web_1, default
+auto-tuner); ≥50× seed→sampled speedup at 1024 tenants (full mode
+only); the segment-aligned-padding gate — the **exact fused path must
+beat the per-tenant loop outright**: ``speedup_fused >= 2.0`` at the
+largest tenant count of the run; and, on accelerator hosts, the
+device-pipeline gate ``speedup_device >= 1.5`` over the fused host path
+and the mesh gate ``speedup_sharded >= 1.2`` over the single-device
+program (both vacuous on CPU, where every pipeline shares the same
+cores).  All engine timings are best-of-reps (single-shot timings
+flaked the 2.0 fused gate on noisy boxes).  Results are written to
 ``BENCH_monitor_scale.json``.
 
 ``--smoke`` (the CI configuration) runs the 16-tenant point only with a
 short window — fast, and still fails on any control-plane hot-path
-regression, *including* the fused-speedup and device gates.
+regression, *including* the fused-speedup, device and sharded gates.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
+
+# the sharded rows need a real multi-device mesh on CPU hosts; must be
+# set before jax initializes (harmless on accelerator hosts, where the
+# flag only affects the unused host platform)
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import numpy as np
 
@@ -109,6 +131,15 @@ def device_path(traces, capacity, c_min, profile=None,
     return pipe.run(traces, profile=profile)
 
 
+def sharded_path(traces, capacity, c_min, mesh, profile=None,
+                 transfer_sanitize=False):
+    pipe = DeviceWindowPipeline(capacity=capacity, c_min=c_min,
+                                t_fast=SIM["t_fast"], t_slow=SIM["t_slow"],
+                                transfer_sanitize=transfer_sanitize,
+                                mesh=mesh)
+    return pipe.run(traces, profile=profile)
+
+
 def run_scale(n_tenants: int, n: int, c_min: int = 50,
               reps: int = 3, engine_reps: int = 2,
               profile: bool = False) -> dict:
@@ -155,6 +186,27 @@ def run_scale(n_tenants: int, n: int, c_min: int = 50,
     device_ok = (device_identical if not _accel_default()
                  else lat_dev <= lat_fused * 1.001)
 
+    # sharded pipeline: the same decision under shard_map over the full
+    # local mesh.  Warm-up under the transfer guard proves the <=1 host
+    # sync per window per mesh contract (any hidden broadcast or fetch
+    # beyond the explicit decision pull raises); timed runs use the
+    # default path
+    from repro.distributed.sharding import control_plane_mesh
+    mesh = control_plane_mesh()
+    shprof = StageProfile()
+    sdec = sharded_path(traces, capacity, c_min, mesh, profile=shprof,
+                        transfer_sanitize=True)
+    sharded_syncs = shprof.syncs_per_window
+    sharded_s = float("inf")
+    for _ in range(max(engine_reps, 2)):
+        t0 = time.perf_counter()
+        sdec = sharded_path(traces, capacity, c_min, mesh)
+        sharded_s = min(sharded_s, time.perf_counter() - t0)
+    sharded_identical = bool(np.array_equal(sdec.sizes, p_fused.sizes))
+    lat_sh = aggregate_latency(hs_exact, sdec.sizes, **SIM)
+    sharded_ok = (sharded_identical if not _accel_default()
+                  else lat_sh <= lat_fused * 1.001)
+
     # the sampled decision runs in milliseconds: always take best-of-reps
     sampled_s = float("inf")
     for _ in range(reps):
@@ -168,9 +220,10 @@ def run_scale(n_tenants: int, n: int, c_min: int = 50,
     row = {
         "tenants": n_tenants, "n_per_window": n, "capacity": capacity,
         "seed_s": seed_s, "fused_s": fused_s, "device_s": device_s,
-        "sampled_s": sampled_s,
+        "sharded_s": sharded_s, "sampled_s": sampled_s,
         "speedup_fused": seed_s / max(fused_s, 1e-12),
         "speedup_device": fused_s / max(device_s, 1e-12),
+        "speedup_sharded": device_s / max(sharded_s, 1e-12),
         "speedup_sampled": seed_s / max(sampled_s, 1e-12),
         "fused_bit_identical": bool(np.array_equal(p_seed.sizes,
                                                    p_fused.sizes)),
@@ -180,6 +233,10 @@ def run_scale(n_tenants: int, n: int, c_min: int = 50,
         # the profiled warm-up above completed under the transfer guard:
         # zero hidden syncs, one explicit fetch — enforced, not counted
         "device_guard_enforced": True,
+        "sharded_bit_identical": sharded_identical,
+        "sharded_decision_ok": sharded_ok,
+        "sharded_syncs_per_window": sharded_syncs,
+        "n_shards": int(np.asarray(mesh.devices).size),
         "sampled_latency_ratio": lat_smp / max(lat_exact, 1e-12),
         "mean_expected_error": float(mon_smp.expected_errors.mean()),
     }
@@ -211,9 +268,57 @@ def run_scale(n_tenants: int, n: int, c_min: int = 50,
     emit(f"monitor_scale_T{n_tenants}_device", device_s * 1e6,
          f"speedup_vs_fused={row['speedup_device']:.2f}x_identical="
          f"{device_identical}_syncs={device_syncs:.0f}")
+    emit(f"monitor_scale_T{n_tenants}_sharded", sharded_s * 1e6,
+         f"speedup_vs_device={row['speedup_sharded']:.2f}x_identical="
+         f"{sharded_identical}_shards={row['n_shards']}"
+         f"_syncs={sharded_syncs:.0f}")
     emit(f"monitor_scale_T{n_tenants}_sampled", sampled_s * 1e6,
          f"speedup={row['speedup_sampled']:.1f}x_lat_ratio="
          f"{row['sampled_latency_ratio']:.4f}")
+    return row
+
+
+def frontier_row(n_tenants: int = 65536, n: int = 400, c_min: int = 2,
+                 reps: int = 2) -> dict:
+    """The ≥65k-tenant frontier: sampled-only (the per-tenant seed loop
+    would dominate the nightly budget at this scale), SHARDS auto-tuned
+    down to ~64 samples per tenant.  Times the host-fused sampled
+    decision and the sharded-mesh sampled monitor at the same salts, and
+    checks the mesh reproduces the host's integer outputs exactly (URD
+    sizes — exact at any float width) plus the full allocation off TPU.
+    """
+    traces = synthetic_mix(n_tenants, n, seed=9)
+    capacity = n_tenants * (c_min + 20)
+    sampled_s = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        p_smp, mon = fused_path(traces, capacity, c_min,
+                                sample_rate="auto", target=64, floor=16)
+        sampled_s = min(sampled_s, time.perf_counter() - t0)
+    sharded_s = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        mon_sh = analyze_windows(traces, "urd", sample_rate="auto",
+                                 sample_target=64, sample_floor=16,
+                                 pipeline="sharded")
+        sharded_s = min(sharded_s, time.perf_counter() - t0)
+    p_sh = greedy_allocate(mon_sh.curves, capacity, SIM["t_fast"],
+                           SIM["t_slow"], c_min=c_min, method="fast")
+    identical = bool(np.array_equal(mon_sh.urd_sizes, mon.urd_sizes))
+    if not _accel_default():
+        identical = identical and bool(np.array_equal(p_sh.sizes,
+                                                      p_smp.sizes))
+    row = {
+        "tenants": n_tenants, "n_per_window": n, "capacity": capacity,
+        "sampled_only": True, "sampled_s": sampled_s,
+        "sharded_monitor_s": sharded_s,
+        "sharded_bit_identical": identical,
+        "mean_sample_rate": float(mon.sample_rates.mean()),
+        "mean_expected_error": float(mon.expected_errors.mean()),
+    }
+    emit(f"monitor_scale_T{n_tenants}_sampled_frontier", sampled_s * 1e6,
+         f"rate={row['mean_sample_rate']:.3f}_sharded_identical="
+         f"{identical}")
     return row
 
 
@@ -250,39 +355,60 @@ def main(tenant_counts=(16, 128, 1024), n_per_window: int = 8000,
     rows = [run_scale(t, n_per_window, engine_reps=engine_reps,
                       profile=profile)
             for t in tenant_counts]
+    # full mode appends the >=65k-tenant sampled frontier row (skipped in
+    # smoke: the CI tier-1 budget is seconds, the frontier is minutes)
+    if not smoke:
+        rows.append(frontier_row())
+    full = [r for r in rows if not r.get("sampled_only")]
     # smoke shrinks the tuner target so the sampled path is actually
     # exercised (rate < 1) on the short CI windows
     t3 = (table3_decision_check(2000, target=512) if smoke
           else table3_decision_check(8000))
     # the padding gate: the exact fused pass must beat the per-tenant
     # loop outright at the largest scale of the run (2x, not just parity)
-    big = max(rows, key=lambda r: r["tenants"])
+    big = max(full, key=lambda r: r["tenants"])
     checks = {
         "fused_bit_identical_all": all(r["fused_bit_identical"]
-                                       for r in rows),
+                                       for r in full),
         "device_bit_identical_all": all(r["device_decision_ok"]
-                                        for r in rows),
+                                        for r in full),
         "device_syncs_le_1": all(r["device_syncs_per_window"] <= 1.0
-                                 for r in rows),
+                                 for r in full),
         "device_guard_enforced": all(r["device_guard_enforced"]
+                                     for r in full),
+        # the mesh is a pure optimization at every scale (the frontier
+        # row's sampled sharded monitor included) ...
+        "sharded_bit_identical": all(r["sharded_decision_ok"]
+                                     if not r.get("sampled_only")
+                                     else r["sharded_bit_identical"]
                                      for r in rows),
+        # ... and pays at most one host sync per window per mesh
+        "sharded_syncs_le_mesh": all(r["sharded_syncs_per_window"] <= 1.0
+                                     for r in full),
         "sampled_within_5pct_mix": all(r["sampled_latency_ratio"] <= 1.05
-                                       for r in rows),
+                                       for r in full),
         "table3_sampled_within_5pct": t3["within_5pct"],
         "fused_speedup_ge": big["speedup_fused"] >= 2.0,
-        # the device program's win over the fused host path is an
-        # accelerator property (off TPU both pipelines share the CPU);
-        # the gate arms only on accelerator hosts, the row is always
+        # the device program's win over the fused host path — and the
+        # mesh's win over the single-device program — are accelerator
+        # properties (off TPU every pipeline shares the same CPU cores);
+        # the gates arm only on accelerator hosts, the rows are always
         # reported
         "speedup_device_ge": (big["speedup_device"] >= 1.5
                               if _accel_default() else True),
+        "speedup_sharded_ge": (big["speedup_sharded"] >= 1.2
+                               if _accel_default() else True),
     }
     if 1024 in tenant_counts:
-        big = next(r for r in rows if r["tenants"] == 1024)
+        big = next(r for r in full if r["tenants"] == 1024)
         checks["speedup_1024_ge_50x"] = big["speedup_sampled"] >= 50.0
+    if not smoke:
+        checks["sampled_65k_row"] = any(r.get("sampled_only")
+                                        and r["tenants"] >= 65536
+                                        for r in rows)
     out = {"rows": rows, "table3": t3,
            "checks": checks, "fused_speedup_gate": 2.0,
-           "device_speedup_gate": 1.5}
+           "device_speedup_gate": 1.5, "sharded_speedup_gate": 1.2}
     with open("BENCH_monitor_scale.json", "w") as f:
         json.dump(out, f, indent=2)
     for k, v in checks.items():

@@ -141,9 +141,14 @@ def transfer_sanitizer(enabled: bool = True):
     after the fact.  Explicit ``jax.device_put`` / ``jax.device_get``
     stay exempt, which is exactly the contract: ingest transfers in via
     ``device_put``, and the window's one permitted sync — the decision
-    fetch in ``_fetch`` — goes out via ``device_get``.  Complements the
-    static RL001 pass (tools/repro_lint), which cannot see through
-    dynamic dispatch.
+    fetch in ``_fetch`` — goes out via ``device_get``.  On the sharded
+    pipeline the same contract holds **per mesh**: the stacked per-shard
+    ingest is one explicit (async) ``device_put`` across the whole mesh
+    and the replicated decision comes back in one ``device_get``, so a
+    window still costs ≤ 1 host sync no matter how many shards the mesh
+    holds (asserted by the shard suite via ``StageProfile``).
+    Complements the static RL001 pass (tools/repro_lint), which cannot
+    see through dynamic dispatch.
     """
     if not enabled:
         return contextlib.nullcontext()
@@ -439,6 +444,11 @@ def _programs(key: tuple) -> dict:
         "curve": jax.jit(curve_stage),
         "wr": jax.jit(wr_stage),
         "partition": jax.jit(partition_stage),
+        # unjitted stage bodies: the sharded pipeline re-traces exactly
+        # these closures inside its shard_map body (core.shard_pipeline),
+        # so per-shard counting/curve/partition stays one implementation
+        "stages": {"count": count_stage, "curve": curve_stage,
+                   "wr": wr_stage, "partition": partition_stage},
     }
     _PROGRAMS[key] = progs
     return progs
@@ -564,7 +574,7 @@ class DeviceWindowPipeline:
                  t_slow: float = 20.0, c_min: int = 0, kind: str = "urd",
                  weights: np.ndarray | None = None,
                  use_kernel: bool | None = None, f64: bool | None = None,
-                 transfer_sanitize: bool = False):
+                 transfer_sanitize: bool = False, mesh=None):
         self.capacity = int(capacity)
         self.t_fast, self.t_slow = float(t_fast), float(t_slow)
         self.c_min = int(c_min)
@@ -577,6 +587,11 @@ class DeviceWindowPipeline:
         # under jax.transfer_guard("disallow") so any hidden host sync
         # raises; the decision fetch stays legal (explicit device_get)
         self.transfer_sanitize = bool(transfer_sanitize)
+        # default-off (None = this single-device pipeline, byte-identical
+        # to pre-mesh behavior); a 1-D ("shards",) mesh routes every
+        # window through the shard_map twin (core.shard_pipeline) with
+        # per-shard async ingest and the budget cut replicated
+        self.mesh = mesh
 
     # ------------------------------------------------------------ plumbing
     def _params(self, n: int) -> dict:
@@ -597,13 +612,25 @@ class DeviceWindowPipeline:
         else:
             addrs = np.zeros(0, np.int64)
             is_read = np.zeros(0, bool)
-        ing = ingest_window(addrs, is_read, bounds, lens, kind=self.kind,
-                            use_kernel=self.use_kernel, f64=self.f64,
-                            profile=profile)
+        if self.mesh is not None:
+            from repro.core.shard_pipeline import ingest_window_sharded
+            ing = ingest_window_sharded(
+                addrs, is_read, bounds, lens, mesh=self.mesh,
+                kind=self.kind, use_kernel=self.use_kernel, f64=self.f64,
+                profile=profile)
+        else:
+            ing = ingest_window(addrs, is_read, bounds, lens,
+                                kind=self.kind, use_kernel=self.use_kernel,
+                                f64=self.f64, profile=profile)
         return ing, n, np.maximum(lens, 1)
 
     def _dispatch(self, ing: WindowIngest,
                   profile: StageProfile | None = None):
+        if self.mesh is not None:
+            from repro.core.shard_pipeline import dispatch_decision_sharded
+            return dispatch_decision_sharded(
+                ing, self._params(ing.n), profile,
+                sanitize=self.transfer_sanitize)
         progs = _programs(ing.key)
         p = self._params(ing.n)
         with transfer_sanitizer(self.transfer_sanitize), _x64(ing.f64):

@@ -26,9 +26,12 @@ Fault taxonomy (``FaultSpec.kind``):
                     ``param`` selects the mode): exercises the decision
                     guard, which must quarantine instead of actuating.
   ``pipeline``    — monitor launch failure: the ladder rung named by
-                    ``rung`` ("device" | "host" | "tenant", "" = all)
-                    raises ``InjectedFault`` at dispatch for the first
-                    ``count`` attempts of each matching window.
+                    ``rung`` ("sharded" | "device" | "host" | "tenant",
+                    "" = all) raises ``InjectedFault`` at dispatch for
+                    the first ``count`` attempts of each matching window
+                    (a "sharded" spec models a per-shard launch failure
+                    inside the mesh program: the whole window steps down
+                    to the single-device rung).
   ``straggler``   — tenant's window tape arrives late: the manager holds
                     the tenant out of this window's analyze (last-known-good
                     size/policy) and folds the deferred tape into the next.
@@ -241,8 +244,8 @@ class FaultPlan:
                 tenant=int(rng.integers(n_tenants)),
                 level=1, duration=int(rng.integers(1, 3)),
                 count=int(rng.integers(1, 4)),
-                rung=("", "host")[int(rng.integers(2))] if kind == "pipeline"
-                     else "",
+                rung=("", "host", "sharded")[int(rng.integers(3))]
+                     if kind == "pipeline" else "",
                 param=float(rng.integers(3)) if kind in ("curve_nan",
                                                          "poison")
                       else (0.5 if kind == "truncate" else 0.0)))

@@ -292,9 +292,9 @@ class ECICacheManager:
                  demote_policy: WritePolicy | str = WritePolicy.WT):
         if engine not in ("batch", "lru"):
             raise ValueError(f"engine must be 'batch' or 'lru', got {engine!r}")
-        if pipeline not in ("host", "device"):
-            raise ValueError(
-                f"pipeline must be 'host' or 'device', got {pipeline!r}")
+        if pipeline not in ("host", "device", "sharded"):
+            raise ValueError(f"pipeline must be 'host', 'device' or "
+                             f"'sharded', got {pipeline!r}")
         self.capacity = int(capacity)
         self.capacity2 = int(capacity2)
         self.c_min = int(c_min)
@@ -315,8 +315,9 @@ class ECICacheManager:
         self.partition_fn = partition_fn
         self.engine = engine
         # "device" routes each analyze through the fused device window
-        # program (core.device_pipeline); falls back to the host pipeline
-        # when percentile < 100 (the device program is percentile-free)
+        # program (core.device_pipeline), "sharded" through its mesh twin
+        # (core.shard_pipeline); both fall back to the host pipeline when
+        # percentile < 100 (the device programs are percentile-free)
         self.pipeline = pipeline
         init = int(initial_blocks if initial_blocks is not None else c_min)
         self.tenants = [TenantState(n, LRUCache(init)) for n in tenant_names]
@@ -374,6 +375,7 @@ class ECICacheManager:
         self.guard_quarantines = 0
         self.guard_violations_observed = 0
         self.guard_violations_actuated = 0
+        self.sharded_stepdowns = 0
         self.device_stepdowns = 0
         self.host_stepdowns = 0
         self.tenant_quarantines = 0
@@ -508,7 +510,12 @@ class ECICacheManager:
             self.windows_analyzed += 1
             return mon, act, pipe
         win = self._cur_window
-        rungs = (["device"] if pipe == "device" else []) + ["host", "tenant"]
+        # top of the ladder: sharded mesh → single device → fused host →
+        # per-tenant solo; a per-shard launch failure inside the mesh
+        # program surfaces at the window dispatch and steps the whole
+        # window down one rung (counted per rung in summary())
+        rungs = ({"sharded": ["sharded", "device"],
+                  "device": ["device"]}.get(pipe, []) + ["host", "tenant"])
         for rung in rungs:
             attempts = (self.retry_limit + 1) if rung != "tenant" else 1
             for attempt in range(attempts):
@@ -524,7 +531,8 @@ class ECICacheManager:
                     mon = analyze_windows(
                         traces,
                         precomputed_trd=(pre if rung == "host" else None),
-                        pipeline=("device" if rung == "device" else "host"),
+                        pipeline=(rung if rung in ("sharded", "device")
+                                  else "host"),
                         fault_hook=self._launch_hook(win, rung, attempt),
                         **kw)
                     self.windows_analyzed += 1
@@ -535,7 +543,9 @@ class ECICacheManager:
                     if self.backoff_base > 0 and attempt + 1 < attempts:
                         time.sleep(min(self.backoff_base * (2 ** attempt),
                                        1.0))
-            if rung == "device":
+            if rung == "sharded":
+                self.sharded_stepdowns += 1
+            elif rung == "device":
                 self.device_stepdowns += 1
             elif rung == "host":
                 self.host_stepdowns += 1
@@ -1032,6 +1042,7 @@ class ECICacheManager:
             "guard_quarantines": self.guard_quarantines,
             "guard_violations_observed": self.guard_violations_observed,
             "guard_violations_actuated": self.guard_violations_actuated,
+            "sharded_stepdowns": self.sharded_stepdowns,
             "device_stepdowns": self.device_stepdowns,
             "host_stepdowns": self.host_stepdowns,
             "tenant_quarantines": self.tenant_quarantines,

@@ -5,7 +5,7 @@ optionally one *device program* for the whole window.
 pass, ``build_hit_ratio_function`` and the Alg.-3 write ratio per tenant, so
 the control plane — not the simulated I/O — dominated at the ROADMAP's
 thousand-tenant scale.  ``analyze_windows`` replaces that loop with batched
-array code, in one of two pipelines:
+array code, in one of three pipelines:
 
   * ``pipeline="host"`` (default): the fused numpy path below — one padded
     tape, one counting pass, segment reductions.  Stage boundaries still
@@ -30,11 +30,31 @@ array code, in one of two pipelines:
     per-tenant host arrays back in.  ``DeviceWindowPipeline`` extends the
     same program through the partition stage and double-buffers ingest
     across windows.
+  * ``pipeline="sharded"``: the device program partitioned over a 1-D
+    ``("shards",)`` mesh (``core.shard_pipeline``).  The padded tape is
+    split **by whole tenant-segments** (greedy width-balanced assignment
+    that keeps every shard's rows descending-pow2 self-aligned), and each
+    shard runs the same counting/curve/write-ratio stage closures under
+    ``shard_map`` on its resident chunk.  *Why sharding is exact*: the
+    boundary-severing argument above is segment-local — occurrence links
+    are clamped at segment ends and every pad/cross-segment dominance
+    contribution cancels identically — so a shard holding whole segments
+    computes exactly the counts the global tape would, with **no
+    cross-device links at all**.  Only integer per-tenant summaries
+    (breakpoint/URD/write counts) are ``psum``-reduced across shards
+    (exact — each tenant lives wholly on one shard, foreign shards add
+    zeros) and the device-resident curve store is ``all_gather``-ed once
+    for the single replicated step, the envelope-walk budget cut — so
+    curves, URD sizes, write ratios and allocations stay bit-identical
+    to the fused host path at any shard count.  Still ≤ 1 host sync per
+    window *per mesh*.  Default mesh:
+    ``distributed.sharding.control_plane_mesh()`` over every local
+    device (tests/CI force 8 host devices via ``XLA_FLAGS``).
 
-Both pipelines accept a ``StageProfile`` (``profile=``) recording per-stage
+All pipelines accept a ``StageProfile`` (``profile=``) recording per-stage
 wall time and host-sync counts — ``benchmarks/bench_monitor_scale.py
---profile`` reports the breakdown, and the ≤1-sync property of the device
-program is asserted in tests.
+--profile`` reports the breakdown, and the ≤1-sync-per-window(-per-mesh)
+property of the device and sharded programs is asserted in tests.
 
 The fused host path:
 
@@ -268,8 +288,10 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
     SHARDS salts under tenant retirement (defaults to positional ids).
     ``pipeline="device"`` routes the window through the fused device
     program (one jit, one host sync — requires ``percentile == 100``);
+    ``pipeline="sharded"`` through its ``shard_map`` twin over the
+    default control-plane mesh (same requirement, one sync per mesh);
     ``profile`` (a ``device_pipeline.StageProfile``) records per-stage
-    times and host syncs on either pipeline.
+    times and host syncs on any pipeline.
 
     ``validate=True`` checks every tape against the ingest contract first
     and raises ``TraceError`` with (tenant, window) coordinates on a
@@ -282,12 +304,12 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
     """
     if kind not in ("trd", "urd"):
         raise ValueError(f"kind must be 'trd' or 'urd', got {kind!r}")
-    if pipeline not in ("host", "device"):
-        raise ValueError(
-            f"pipeline must be 'host' or 'device', got {pipeline!r}")
-    if pipeline == "device" and percentile < 100.0:
-        raise ValueError("pipeline='device' computes URD sizes from the "
-                         "curve store (percentile=100); use the host "
+    if pipeline not in ("host", "device", "sharded"):
+        raise ValueError(f"pipeline must be 'host', 'device' or 'sharded', "
+                         f"got {pipeline!r}")
+    if pipeline != "host" and percentile < 100.0:
+        raise ValueError(f"pipeline={pipeline!r} computes URD sizes from "
+                         "the curve store (percentile=100); use the host "
                          "pipeline for percentile < 100")
     n = len(traces)
     lens = np.array([len(t) for t in traces], dtype=np.int64)
@@ -305,15 +327,22 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
         is_read = (np.concatenate([t.is_read for t in traces]) if m
                    else np.zeros(0, bool))
         tid = np.repeat(np.arange(n, dtype=np.int64), lens)
-        if pipeline == "device":
-            # one fused program, one sync; recounts even precomputed
-            # windows (deterministically equal — see module doc)
-            from repro.core.device_pipeline import monitor_window_device
+        if pipeline in ("device", "sharded"):
+            # one fused program (per mesh when sharded), one sync;
+            # recounts even precomputed windows (deterministically equal
+            # — see module doc)
             addrs = (np.concatenate([t.addrs for t in traces]) if m
                      else np.zeros(0, np.int64))
-            curves, urd, wr, _ = monitor_window_device(
-                addrs, is_read, bounds, lens, kind=kind, profile=profile,
-                launch_hook=fault_hook)
+            if pipeline == "sharded":
+                from repro.core.shard_pipeline import monitor_window_sharded
+                curves, urd, wr, _ = monitor_window_sharded(
+                    addrs, is_read, bounds, lens, kind=kind,
+                    profile=profile, launch_hook=fault_hook)
+            else:
+                from repro.core.device_pipeline import monitor_window_device
+                curves, urd, wr, _ = monitor_window_device(
+                    addrs, is_read, bounds, lens, kind=kind,
+                    profile=profile, launch_hook=fault_hook)
             return MonitorResult(curves, urd, wr, np.ones(n),
                                  np.zeros(n), kind)
         if fault_hook is not None:
@@ -394,14 +423,20 @@ def analyze_windows(traces: list[Trace], kind: str = "urd",
         addrs_s = np.zeros(0, np.int64)
         read_s = np.zeros(0, bool)
     tid_s = np.repeat(np.arange(n, dtype=np.int64), kept)
-    if pipeline == "device":
+    if pipeline in ("device", "sharded"):
         # the fused program scales distances, builds the HT curves and the
         # write ratios on device; cold accesses of the kept sub-tape (its
         # distinct addresses) come back for the error bars
-        from repro.core.device_pipeline import monitor_window_device
-        curves, urd, wr, distinct = monitor_window_device(
-            addrs_s, read_s, sub_bounds, lens, rates=rates, kind=kind,
-            profile=profile, launch_hook=fault_hook)
+        if pipeline == "sharded":
+            from repro.core.shard_pipeline import monitor_window_sharded
+            curves, urd, wr, distinct = monitor_window_sharded(
+                addrs_s, read_s, sub_bounds, lens, rates=rates, kind=kind,
+                profile=profile, launch_hook=fault_hook)
+        else:
+            from repro.core.device_pipeline import monitor_window_device
+            curves, urd, wr, distinct = monitor_window_device(
+                addrs_s, read_s, sub_bounds, lens, rates=rates, kind=kind,
+                profile=profile, launch_hook=fault_hook)
     else:
         if fault_hook is not None:
             fault_hook()

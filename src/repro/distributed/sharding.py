@@ -19,7 +19,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 __all__ = ["param_specs", "batch_specs", "cache_specs", "state_specs",
-           "spec_for", "DP"]
+           "spec_for", "DP", "control_plane_mesh"]
 
 
 def DP(mesh) -> tuple[str, ...] | str:
@@ -192,3 +192,22 @@ def state_specs(state, mesh):
         },
         "step": NamedSharding(mesh, P()),
     }
+
+
+# ---------------------------------------------------------------- control plane
+def control_plane_mesh(n_shards: int | None = None):
+    """1-D ``("shards",)`` mesh for the sharded control plane.
+
+    The ECI control-plane shard pipeline (``core.shard_pipeline``)
+    partitions the window tape by whole tenant-segments over this axis.
+    Uses every local device by default; ``n_shards`` caps the mesh (and
+    degrades gracefully to however many devices exist, so single-device
+    hosts run the sharded path as a 1-shard mesh bit-identically).  On
+    CPU hosts the test/CI harness forces
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` so the mesh
+    exercises real multi-device semantics everywhere.
+    """
+    devices = jax.devices()
+    k = len(devices) if n_shards is None else max(1, min(int(n_shards),
+                                                         len(devices)))
+    return jax.sharding.Mesh(np.array(devices[:k]), ("shards",))

@@ -9,10 +9,22 @@ Also exposes the differential oracle harness (``tests/oracle.py``) as
 fixtures, so non-hypothesis tests can consume the shared engine-equality
 core without imports.  The nightly CI job scales every suite's example
 count through ``HYP_EXAMPLES_SCALE`` (see ``oracle.examples``).
+
+Forces 8 host platform devices (before any jax import) so the sharded
+control plane (``core.shard_pipeline``) runs against a real multi-device
+mesh on CPU hosts; subprocess-based tests overwrite ``XLA_FLAGS`` in the
+child themselves, so the parent-level flag never leaks a wrong count.
 """
 import importlib.util
+import os
 import pathlib
 import sys
+
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
 
 import pytest
 
@@ -46,3 +58,11 @@ def oracle_mod():
     """The oracle module itself (strategies, comparators, helpers)."""
     import oracle
     return oracle
+
+
+@pytest.fixture(scope="session")
+def shard_mesh():
+    """Full-width ``("shards",)`` control-plane mesh (8 forced host
+    devices on CPU, the real device set on accelerator hosts)."""
+    from repro.distributed.sharding import control_plane_mesh
+    return control_plane_mesh()

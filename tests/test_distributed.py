@@ -1,8 +1,10 @@
 """Distributed behaviour on multi-host-device CPU meshes.
 
-Each test runs in a subprocess with ``xla_force_host_platform_device_count``
-set, so the main pytest process keeps the default single device (the brief
-forbids a global override).
+Each test runs in a subprocess that overwrites ``XLA_FLAGS`` with its own
+``xla_force_host_platform_device_count`` before importing jax, so the
+device count each script sees is exactly what it asked for — independent
+of the 8-device flag conftest now sets for the in-process shard suite
+(``tests/test_shard_pipeline.py``).
 """
 import json
 import os

@@ -261,6 +261,24 @@ def test_device_rung_failure_steps_down_to_host():
     assert s["guard_violations_actuated"] == 0
 
 
+def test_sharded_rung_failure_steps_down_to_device():
+    """A per-shard launch failure inside the mesh program kills the whole
+    sharded rung for the window: exactly one sharded→device step-down,
+    the single-device rung still delivers a full decision."""
+    plan = FaultPlan((FaultSpec("pipeline", window=2, rung="sharded",
+                                count=99),), seed=1)
+    mgr = run_windows(mk_manager(faults=plan, retry_limit=1,
+                                 pipeline="sharded"), 4)
+    s = mgr.summary()
+    assert s["sharded_stepdowns"] == 1
+    assert s["device_stepdowns"] == 0
+    assert s["host_stepdowns"] == 0
+    (ev,) = degrade_events(mgr, "stepdown")
+    assert ev.window == 2 and ev.rung == "sharded"
+    assert not mgr.history[2].quarantined
+    assert s["guard_violations_actuated"] == 0
+
+
 def test_all_rungs_dead_falls_back_to_last_known_good():
     plan = FaultPlan((FaultSpec("pipeline", window=2, count=99),), seed=1)
     mgr = run_windows(mk_manager(faults=plan, retry_limit=0), 5)
@@ -351,6 +369,24 @@ def test_chaos_never_raises_never_actuates_garbage(seed):
         if not d.quarantined:
             assert validate_decision(d, faulted.capacity,
                                      faulted.capacity2).ok
+
+
+@settings(max_examples=examples(3), deadline=None)
+@given(st.integers(0, 10**6))
+def test_chaos_sharded_pipeline_reconverges(seed):
+    """Chaos schedules against the sharded top rung (``FaultPlan.chaos``
+    now draws ``rung="sharded"`` pipeline faults): the tolerant
+    sharded-pipeline manager steps down the full ladder as needed and
+    reconverges to the no-fault sharded run within the documented K."""
+    plan = FaultPlan.chaos(3, 10, seed=seed, max_faults=3)
+    n = plan.last_fault_window() + plan.reconverge_bound(2) + 1
+    base = run_windows(mk_manager(pipeline="sharded"), n,
+                       base=seed % 1000)
+    faulted = run_windows(mk_manager(faults=plan, pipeline="sharded"), n,
+                          base=seed % 1000)
+    s = faulted.summary()
+    assert s["guard_violations_actuated"] == 0
+    assert _final_state(base) == _final_state(faulted)
 
 
 @pytest.mark.slow

@@ -129,6 +129,31 @@ def test_rl001_suppression_on_preceding_comment_line(tmp_path):
     assert res.ok and len(res.suppressed) == 1
 
 
+def test_rl001_sees_through_shard_map_bodies(tmp_path):
+    """A host sync inside a ``shard_map`` body is traced code exactly like
+    a jitted function (the rule gap the shard pipeline exposed): flagged,
+    while a sync-free body stays clean."""
+    src = """
+        import jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        def body(tape):
+            s = jnp.sum(tape["x"])
+            return s.item()
+
+        prog = shard_map(body, mesh=None, in_specs=(P(),), out_specs=P())
+    """
+    res = run_lint(tmp_path, {"core/shard_pipeline.py": src},
+                   select=["RL001"])
+    (f,) = rule_hits(res, "RL001")
+    assert ".item()" in f.message and f.path == "core/shard_pipeline.py"
+    clean = src.replace("return s.item()", "return s")
+    res = run_lint(tmp_path, {"core/shard_pipeline.py": clean},
+                   select=["RL001"])
+    assert rule_hits(res, "RL001") == []
+
+
 # ================================================================= RL002
 def test_rl002_missing_oracle(tmp_path):
     res = run_lint(tmp_path, {

@@ -1,0 +1,288 @@
+"""Sharded control plane == fused device program == host monitor.
+
+The shard pipeline (``core.shard_pipeline``) partitions the padded
+window tape across a 1-D ``("shards",)`` mesh by whole tenant-segments
+and must be a pure optimization: every curve / URD size / write ratio /
+allocation is bit-identical to the host monitor (f64 mode) at *any*
+shard count — 1, 2 and 8 are the matrix here (conftest forces 8 host
+devices).  The suite also pins the placement invariants (true
+partition, per-shard self-alignment, 2x-of-optimal balance) and the
+<= 1 host sync per window per mesh transfer contract.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from oracle import assert_monitor_equal, examples
+
+from repro.core import (DeviceWindowPipeline, ECICacheManager, StageProfile,
+                        Trace, analyze_windows)
+from repro.core.shard_pipeline import (monitor_window_sharded,
+                                       shard_assignment,
+                                       uniform_shard_layout)
+from repro.distributed.sharding import control_plane_mesh
+from repro.kernels.cache_sim.ops import _on_tpu
+
+SHARD_COUNTS = (1, 2, 8)
+
+
+def _rand_traces(seed, n_tenants=6, max_n=300, max_addr=40):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n_tenants):
+        n = int(rng.integers(0, max_n))
+        a = rng.integers(0, max_addr, n).astype(np.int64)
+        r = rng.random(n) < rng.uniform(0.1, 0.9)
+        out.append(Trace(a, r, f"t{i}"))
+    return out
+
+
+def _shard_traces(seed):
+    """Adversarial shapes for the sharded program: empty windows,
+    single-access segments and pow2-straddling lengths (63/64/65 land in
+    different padded-width blocks, so they exercise cross-shard width
+    groups and the uniform layout's per-width row capacities)."""
+    rng = np.random.default_rng(seed)
+    out = _rand_traces(seed)
+    out.append(Trace(np.zeros(0, np.int64), np.zeros(0, bool), "empty"))
+    out.append(Trace(np.array([7], np.int64), np.array([True]), "one"))
+    out.append(Trace(np.array([7], np.int64), np.array([False]), "one-w"))
+    for ln in (63, 64, 65):
+        a = rng.integers(0, 12, ln).astype(np.int64)
+        out.append(Trace(a, rng.random(ln) < 0.5, f"pow2-{ln}"))
+    return out
+
+
+def _window_arrays(traces):
+    lens = np.array([len(t) for t in traces], np.int64)
+    bounds = np.concatenate([[0], np.cumsum(lens)]).astype(np.int64)
+    addrs = (np.concatenate([t.addrs for t in traces]) if lens.sum()
+             else np.zeros(0, np.int64))
+    reads = (np.concatenate([t.is_read for t in traces]) if lens.sum()
+             else np.zeros(0, bool))
+    return addrs, reads, bounds, lens
+
+
+# ------------------------------------------------- sharded == host monitor
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+@pytest.mark.parametrize("kind", ["urd", "trd"])
+def test_sharded_monitor_bit_identical(kind, n_shards):
+    """Exact path at every mesh width, adversarial window shapes."""
+    traces = _shard_traces(0)
+    ref = analyze_windows(traces, kind)
+    addrs, reads, bounds, lens = _window_arrays(traces)
+    prof = StageProfile()
+    curves, urd, wr, _ = monitor_window_sharded(
+        addrs, reads, bounds, lens, mesh=control_plane_mesh(n_shards),
+        kind=kind, profile=prof, transfer_sanitize=True)
+    assert np.array_equal(ref.curves.edges, curves.edges)
+    assert np.array_equal(ref.curves.offsets, curves.offsets)
+    assert np.array_equal(ref.urd_sizes, urd)
+    if not _on_tpu():
+        assert np.array_equal(ref.curves.heights, curves.heights)
+        assert np.array_equal(ref.write_ratios, wr)
+    # the transfer contract: one host sync per window per mesh (asserted
+    # under the transfer guard — any hidden device_get would have raised)
+    assert prof.windows == 1 and prof.syncs_per_window <= 1.0
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("kind", ["urd", "trd"])
+def test_analyze_windows_sharded_default_mesh(kind, seed):
+    """``analyze_windows(pipeline="sharded")`` (default full-width mesh)
+    reproduces the host monitor bit-for-bit, one sync per window."""
+    traces = _shard_traces(seed)
+    ref = analyze_windows(traces, kind)
+    prof = StageProfile()
+    got = analyze_windows(traces, kind, pipeline="sharded", profile=prof)
+    assert_monitor_equal(ref, got, exact_floats=not _on_tpu())
+    assert prof.windows == 1 and prof.syncs_per_window <= 1.0
+
+
+def test_sharded_more_shards_than_tenants():
+    """8-shard mesh, 2 tenants: most shards carry only padding rows and
+    must contribute exact zeros to every psum."""
+    traces = _rand_traces(3, n_tenants=2, max_n=120)
+    ref = analyze_windows(traces, "urd")
+    addrs, reads, bounds, lens = _window_arrays(traces)
+    curves, urd, wr, _ = monitor_window_sharded(
+        addrs, reads, bounds, lens, mesh=control_plane_mesh(8))
+    assert np.array_equal(ref.curves.edges, curves.edges)
+    assert np.array_equal(ref.urd_sizes, urd)
+    if not _on_tpu():
+        assert np.array_equal(ref.curves.heights, curves.heights)
+        assert np.array_equal(ref.write_ratios, wr)
+
+
+def test_sharded_single_tenant_per_shard():
+    """8 equal-width tenants over 8 shards: LPT gives every shard exactly
+    one segment (the fully-distributed corner)."""
+    rng = np.random.default_rng(11)
+    traces = [Trace(rng.integers(0, 30, 100).astype(np.int64),
+                    rng.random(100) < 0.6, f"t{i}") for i in range(8)]
+    ref = analyze_windows(traces, "urd")
+    got = analyze_windows(traces, "urd", pipeline="sharded")
+    assert_monitor_equal(ref, got, exact_floats=not _on_tpu())
+    widths = np.full(8, 128, np.int64)           # 100 pads to 128
+    assert len(set(shard_assignment(widths, 8).tolist())) == 8
+
+
+def test_sharded_all_empty_window():
+    """All-empty windows take the trivial path: parity, zero syncs."""
+    traces = [Trace(np.zeros(0, np.int64), np.zeros(0, bool), f"e{i}")
+              for i in range(3)]
+    ref = analyze_windows(traces, "urd")
+    prof = StageProfile()
+    got = analyze_windows(traces, "urd", pipeline="sharded", profile=prof)
+    assert_monitor_equal(ref, got)
+    assert prof.syncs == 0
+
+
+@pytest.mark.parametrize("rate", [0.5, "auto"])
+def test_sharded_sampled_bit_identical(rate):
+    """SHARDS-filtered sub-tape through the mesh: same salts, same
+    filtered segments, bit-identical sampled curves."""
+    traces = _shard_traces(7)
+    ref = analyze_windows(traces, "urd", sample_rate=rate, window_seed=11)
+    got = analyze_windows(traces, "urd", sample_rate=rate, window_seed=11,
+                          pipeline="sharded")
+    assert_monitor_equal(ref, got, exact_floats=not _on_tpu())
+
+
+def test_sharded_rejects_percentile():
+    with pytest.raises(ValueError, match="percentile"):
+        analyze_windows(_rand_traces(0), "urd", percentile=90.0,
+                        pipeline="sharded")
+
+
+# --------------------------------------------- decision pipeline + stream
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_sharded_decision_pipeline_matches_device(n_shards):
+    """``DeviceWindowPipeline(mesh=...)`` returns the same allocation as
+    the single-device pipeline (the budget cut is replicated, so sizes /
+    policies / curves agree bit-for-bit in f64 mode)."""
+    traces = _shard_traces(5)
+    solo = DeviceWindowPipeline(capacity=300, c_min=4)
+    shrd = DeviceWindowPipeline(capacity=300, c_min=4,
+                                mesh=control_plane_mesh(n_shards),
+                                transfer_sanitize=True)
+    prof = StageProfile()
+    a, b = solo.run(traces), shrd.run(traces, profile=prof)
+    assert a.feasible == b.feasible
+    assert np.array_equal(a.urd_sizes, b.urd_sizes)
+    assert prof.syncs_per_window <= 1.0
+    if _on_tpu():
+        assert b.latency == pytest.approx(a.latency, rel=1e-3)
+    else:
+        assert np.array_equal(a.sizes, b.sizes)
+        assert np.array_equal(a.hit_ratios, b.hit_ratios)
+        assert np.array_equal(a.write_ratios, b.write_ratios)
+
+
+def test_sharded_run_stream_double_buffered(shard_mesh):
+    """The double-buffered stream over the mesh (per-shard async ingest
+    of window k+1 behind window k's program) equals window-at-a-time
+    runs, empty windows interleaved."""
+    empty = [Trace(np.zeros(0, np.int64), np.zeros(0, bool))] * 3
+    wins = [_shard_traces(s) for s in (0, 1)] + [empty] + \
+           [_shard_traces(2)]
+    pipe = DeviceWindowPipeline(capacity=300, c_min=3, mesh=shard_mesh,
+                                transfer_sanitize=True)
+    prof = StageProfile()
+    stream = pipe.run_stream(wins, profile=prof)
+    solo = [pipe.run(w) for w in wins]
+    assert len(stream) == len(wins)
+    for a, b in zip(stream, solo):
+        assert np.array_equal(a.sizes, b.sizes)
+        assert np.array_equal(a.urd_sizes, b.urd_sizes)
+        assert a.feasible == b.feasible
+    assert prof.syncs_per_window <= 1.0
+
+
+def test_manager_sharded_pipeline_matches_host():
+    """``ECICacheManager(pipeline="sharded")`` reproduces the host
+    manager's decisions window for window."""
+    def drive(pipeline):
+        mgr = ECICacheManager(600, [f"t{i}" for i in range(5)], c_min=8,
+                              pipeline=pipeline)
+        rng = np.random.default_rng(17)
+        for _ in range(3):
+            traces = []
+            for i in range(5):
+                n = int(rng.integers(20, 250))
+                traces.append(Trace(rng.integers(0, 50, n).astype(np.int64),
+                                    rng.random(n) < 0.6, f"t{i}"))
+            mgr.run_window(traces)
+        return mgr
+    mh, ms = drive("host"), drive("sharded")
+    for a, b in zip(mh.history, ms.history):
+        assert a.policies == b.policies
+        if _on_tpu():
+            assert a.partition.latency == pytest.approx(
+                b.partition.latency, rel=1e-3)
+        else:
+            assert np.array_equal(a.sizes, b.sizes)
+
+
+# --------------------------------------------------- placement invariants
+def _widths_strategy():
+    return st.lists(st.integers(0, 10), min_size=1, max_size=40)
+
+
+@settings(max_examples=examples(60), deadline=None)
+@given(_widths_strategy(), st.sampled_from([1, 2, 3, 8]))
+def test_shard_assignment_invariants(exps, n_shards):
+    """True partition, per-shard descending self-aligned layout, and
+    max-shard width within 2x of optimal."""
+    widths = np.sort(2 ** np.array(exps, np.int64))[::-1]
+    assign = shard_assignment(widths, n_shards)
+    # every row lands on exactly one valid shard (a true partition)
+    assert assign.shape == widths.shape
+    assert ((assign >= 0) & (assign < n_shards)).all()
+    lay = uniform_shard_layout(widths, assign, n_shards)
+    # self-alignment: each row's local entry offset is a multiple of its
+    # own pow2 width, so row-internal indices keep the device program's
+    # alignment guarantees on every shard
+    assert (lay.entry_base % widths == 0).all()
+    assert (lay.entry_base >= 0).all()
+    assert (lay.entry_base + widths <= lay.size).all()
+    for s in range(n_shards):
+        rows = np.flatnonzero(assign == s)       # global descending order
+        w_s = widths[rows]
+        assert (np.diff(w_s) <= 0).all()         # stays width-sorted
+        # local entry ranges are disjoint (no two rows share tape slots)
+        order = np.argsort(lay.entry_base[rows], kind="stable")
+        lo = lay.entry_base[rows][order]
+        assert (lo[:-1] + w_s[order][:-1] <= lo[1:]).all()
+    # LPT balance: max_load <= mean + w_max <= 2 * max(opt_lb, w_max)
+    loads = np.bincount(assign, weights=widths, minlength=n_shards)
+    opt_lb = max(int(np.ceil(widths.sum() / n_shards)), int(widths.max()))
+    assert int(loads.max()) <= 2 * opt_lb
+
+
+@pytest.mark.slow
+@settings(max_examples=examples(10), deadline=None)
+@given(st.integers(0, 10**6), st.sampled_from([None, 0.4]),
+       st.sampled_from(["urd", "trd"]), st.sampled_from([2, 8]))
+def test_sharded_differential_deep(seed, rate, kind, n_shards):
+    """Nightly depth: randomized window shapes, host vs sharded mesh."""
+    rng = np.random.default_rng(seed)
+    traces = []
+    for i in range(int(rng.integers(1, 10))):
+        n = int(rng.integers(0, 200))
+        traces.append(Trace(rng.integers(0, 30, n).astype(np.int64),
+                            rng.random(n) < rng.uniform(0, 1), f"t{i}"))
+    ref = analyze_windows(traces, kind, sample_rate=rate, window_seed=seed)
+    addrs, reads, bounds, lens = _window_arrays(traces)
+    if rate is None:
+        curves, urd, wr, _ = monitor_window_sharded(
+            addrs, reads, bounds, lens, mesh=control_plane_mesh(n_shards),
+            kind=kind)
+        assert np.array_equal(ref.curves.edges, curves.edges)
+        assert np.array_equal(ref.urd_sizes, urd)
+        if not _on_tpu():
+            assert np.array_equal(ref.curves.heights, curves.heights)
+            assert np.array_equal(ref.write_ratios, wr)
+    else:
+        got = analyze_windows(traces, kind, sample_rate=rate,
+                              window_seed=seed, pipeline="sharded")
+        assert_monitor_equal(ref, got, exact_floats=not _on_tpu())

@@ -106,7 +106,8 @@ class Module:
 
 DEFAULT_CONFIG: dict = {
     # RL001: modules whose traced functions must stay host-sync free
-    "device_modules": ("core/device_pipeline.py", "kernels/*/ops.py",
+    "device_modules": ("core/device_pipeline.py",
+                       "core/shard_pipeline.py", "kernels/*/ops.py",
                        "kernels/*/kernel.py", "kernels/*/ref.py"),
     # RL002: kernel packages follow the ops/ref/differential-test triad
     "kernel_modules": ("kernels/*/kernel.py",),

@@ -29,7 +29,7 @@ _TRACE_BODY_ARGS: dict[str, tuple[int, ...]] = {
     "value_and_grad": (0,), "checkpoint": (0,), "remat": (0,),
     "fori_loop": (2,), "scan": (0,), "while_loop": (0, 1),
     "cond": (1, 2), "switch": (1,), "map": (0,),
-    "associative_scan": (0,), "pallas_call": (0,),
+    "associative_scan": (0,), "pallas_call": (0,), "shard_map": (0,),
 }
 _TRACE_BODY_KWARGS = ("fun", "f", "body_fun", "cond_fun", "true_fun",
                       "false_fun", "kernel")
